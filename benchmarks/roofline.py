@@ -1,0 +1,159 @@
+"""Roofline analysis (deliverable g): reads the dry-run JSONs and derives the
+three-term roofline per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes / (chips × 819 GB/s)
+    collective = collective_bytes / (chips × 50 GB/s/link)
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` of the partitioned
+module (per-device numbers; dividing global by chips is equivalent).
+Collective bytes are the summed output shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+partitioned HLO (per-device).  MODEL_FLOPS uses 6·N·D (dense) or
+6·N_active·D (MoE) for training, 2·N·D for single forward passes.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128 * 1,
+    "long_500k": 1 * 1,
+}
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    # Prefer trip-count-aware HLO accounting (repro.launch.hlo_analysis);
+    # fall back to XLA cost_analysis (which undercounts while bodies).
+    flops_dev = rec.get("hlo_dot_flops_per_device") or rec["flops_per_device"]
+    bytes_dev = rec.get("hlo_hbm_bytes_per_device") \
+        or rec["bytes_accessed_per_device"]
+    coll = rec.get("hlo_collective_bytes_per_device") \
+        or rec.get("collectives", {})
+    coll_bytes = sum(v for k, v in coll.items()
+                     if isinstance(v, (int, float)) and not k.startswith("_"))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = SHAPE_TOKENS.get(rec["shape"], 0)
+    n_active = rec.get("active_param_count") or rec.get("param_count") or 0
+    mult = {"train_4k": 6.0, "prefill_32k": 2.0,
+            "decode_32k": 2.0, "long_500k": 2.0}[rec["shape"]]
+    model_flops = mult * n_active * tokens
+    hlo_flops_global = flops_dev * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    # fraction of the dominant-roofline bound actually demanded by useful math
+    bound = max(terms.values())
+    mfu_bound = (model_flops / (chips * PEAK_FLOPS)) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": useful, "roofline_mfu_bound": mfu_bound,
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_flop_ratio"] < 0.5:
+            return ("cut non-useful FLOPs (remat recompute / unmasked causal "
+                    "blocks / dense dispatch)")
+        return "compute-bound near useful-FLOP parity: scale batch or chips"
+    if d == "memory":
+        return ("raise arithmetic intensity: larger per-device batch, bf16 "
+                "cache/master split, fuse elementwise chains")
+    return ("reduce collective volume: reshard to cut all-gathers, overlap "
+            "with compute, or move FSDP gather inside scan")
+
+
+def load(results_dir: str, mesh_filter: str | None = None) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "dryrun_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze(rec)
+        if row and (mesh_filter is None or row["mesh"] == mesh_filter):
+            rows.append(row)
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | 6ND/HLO | bottleneck-relief |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flop_ratio']:.2f} | {suggestion(r)} |")
+    return "\n".join(lines)
+
+
+def compare(dir_a: str, dir_b: str, label_a="baseline", label_b="optimized"):
+    ra = {(r["arch"], r["shape"], r["mesh"]): r for r in load(dir_a)}
+    rb = {(r["arch"], r["shape"], r["mesh"]): r for r in load(dir_b)}
+    print(f"| arch | shape | {label_a} c/m/x (s) | {label_b} c/m/x (s) "
+          "| Δ dominant |")
+    print("|---|---|---|---|---|")
+    for key in sorted(ra):
+        if key not in rb:
+            continue
+        a, b = ra[key], rb[key]
+        da = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        db = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        delta = (db - da) / da * 100 if da else 0.0
+        print(f"| {key[0]} | {key[1]} "
+              f"| {a['t_compute_s']:.2e}/{a['t_memory_s']:.2e}/"
+              f"{a['t_collective_s']:.2e} "
+              f"| {b['t_compute_s']:.2e}/{b['t_memory_s']:.2e}/"
+              f"{b['t_collective_s']:.2e} | {delta:+.0f}% |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="benchmarks/results")
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--compare", nargs=2, metavar=("DIR_A", "DIR_B"),
+                    help="side-by-side baseline-vs-optimized table")
+    args = ap.parse_args()
+    if args.compare:
+        compare(*args.compare)
+        return
+    rows = load(args.results, args.mesh)
+    if args.csv:
+        print("arch,shape,mesh,t_compute,t_memory,t_collective,dominant,"
+              "useful_ratio")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['t_compute_s']:.6e},{r['t_memory_s']:.6e},"
+                  f"{r['t_collective_s']:.6e},{r['dominant']},"
+                  f"{r['useful_flop_ratio']:.3f}")
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

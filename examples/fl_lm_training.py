@@ -1,0 +1,14 @@
+"""End-to-end driver: federated LM training with FedDif on non-IID corpus
+shards (reduced smollm family config on CPU; drop --smoke on real pods).
+
+    PYTHONPATH=src python examples/fl_lm_training.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train", "--arch", "smollm_360m",
+     "--smoke", "--rounds", "4", "--clients", "4", "--steps-per-round", "4",
+     "--seq-len", "64", "--batch", "4"],
+    check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                     "HOME": "/root"})

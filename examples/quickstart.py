@@ -1,0 +1,29 @@
+"""Quickstart: FedDif vs FedAvg on a Dirichlet-non-IID synthetic task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline claim in miniature: under non-IID client
+data, diffusing models across clients between aggregations (FedDif) beats
+plain FedAvg at the same number of communication rounds, at the price of
+extra D2D sub-frames (Table II trade-off).
+"""
+from repro.fl import ExperimentSpec, FLConfig, run_experiment
+
+
+def main():
+    for strategy in ("fedavg", "feddif"):
+        spec = ExperimentSpec(
+            task="fcn", alpha=0.3,            # fairly skewed non-IID
+            num_samples=6000,
+            fl=FLConfig(strategy=strategy, rounds=8, num_clients=8,
+                        num_models=8, epsilon=0.04, gamma_min=1.0, seed=0))
+        res = run_experiment(spec)
+        print(f"{strategy:8s} peak_acc={max(res.accuracy):.3f} "
+              f"acc_by_round={[round(a, 3) for a in res.accuracy]}")
+        print(f"{'':8s} subframes={res.ledger.subframes} "
+              f"transmitted_models={res.ledger.transmitted_models} "
+              f"mean_diffusion_rounds={sum(res.diffusion_rounds)/8:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests (KV-cache decode loop).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3_0_6b",
+     "--smoke", "--batch", "4", "--context", "32", "--new-tokens", "16"],
+    check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                     "HOME": "/root"})

@@ -1,0 +1,9 @@
+from repro.channels.fading import ChannelModel, ChannelParams
+from repro.channels.resources import (ResourceLedger, required_bandwidth,
+                                      outage_probability, spectral_efficiency)
+from repro.channels.topology import CellTopology
+
+__all__ = [
+    "ChannelModel", "ChannelParams", "ResourceLedger", "required_bandwidth",
+    "outage_probability", "spectral_efficiency", "CellTopology",
+]

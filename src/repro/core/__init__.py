@@ -1,0 +1,27 @@
+"""FedDif core: the paper's primary contribution as composable modules.
+
+- ``dol``: DSI/DoL state and IID-distance metrics (Sec. III-B, Lemmas 1–2).
+- ``matching``: Kuhn–Munkres assignment (Algorithm 1's solver).
+- ``auction``: bids, feasibility constraints (18b–18f), winner selection.
+- ``diffusion``: diffusion-round planner (Algorithm 2 control plane).
+- ``aggregation``: FedAvg (Eq. 11) + Prop.-1 divergence bound.
+"""
+from repro.core.dol import (DiffusionState, dsi_from_counts, iid_distance,
+                            iid_distance_candidates, optimal_dsi,
+                            min_feasible_data_size, closed_form_iid_distance,
+                            uniform_dol, update_dol, entropy)
+from repro.core.matching import max_weight_matching, hungarian_min_cost
+from repro.core.auction import AuctionConfig, AuctionResult, compute_bids, run_auction
+from repro.core.diffusion import DiffusionHop, DiffusionPlan, DiffusionPlanner
+from repro.core.aggregation import (fedavg, weight_distance, divergence_bound,
+                                    model_bits)
+
+__all__ = [
+    "DiffusionState", "dsi_from_counts", "iid_distance",
+    "iid_distance_candidates", "optimal_dsi", "min_feasible_data_size",
+    "closed_form_iid_distance", "uniform_dol", "update_dol", "entropy",
+    "max_weight_matching", "hungarian_min_cost",
+    "AuctionConfig", "AuctionResult", "compute_bids", "run_auction",
+    "DiffusionHop", "DiffusionPlan", "DiffusionPlanner",
+    "fedavg", "weight_distance", "divergence_bound", "model_bits",
+]

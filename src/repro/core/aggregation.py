@@ -1,0 +1,58 @@
+"""Global aggregation (Eq. 11) and weight-divergence tracking (Prop. 1).
+
+``fedavg`` is the host/pytree path used by the FL simulator; the SPMD psum
+path lives in ``repro.distributed.collectives``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fedavg", "weight_distance", "divergence_bound", "model_bits"]
+
+
+def fedavg(params_list: Sequence, weights: Sequence[float]):
+    """Eq. (11): data-size-weighted average of parameter pytrees."""
+    w = np.asarray(weights, np.float64)
+    total = w.sum()
+    if total <= 0:
+        raise ValueError("aggregation weights must sum to a positive value")
+    w = (w / total).astype(np.float32)
+
+    def combine(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(combine, *params_list)
+
+
+def weight_distance(a, b) -> float:
+    """Global L2 distance between two parameter pytrees: ‖w_a − w_b‖."""
+    sq = sum(float(jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2))
+             for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    return float(np.sqrt(sq))
+
+
+def divergence_bound(init_gap: float, lipschitz: np.ndarray, eta: float,
+                     mu: float, prob_distance: np.ndarray, k: int) -> float:
+    """Prop. 1 / Eq. (20): upper bound on ‖w^(m)_{t,K} − w^(c)_{t,K}‖.
+
+    ``a = 1 + η·mean(λ_i)``; bound = a^K·‖w0 gap‖ + (a^K−1)/(a−1)·η·μ·mean(Σ_c
+    |P(X_i=c) − P(X_g=c)|).
+    """
+    lam = float(np.mean(lipschitz))
+    a = 1.0 + eta * lam
+    pd = float(np.mean(prob_distance))
+    geom = k if abs(a - 1.0) < 1e-12 else (a ** k - 1.0) / (a - 1.0)
+    return (a ** k) * init_gap + geom * eta * mu * pd
+
+
+def model_bits(params, bits_per_param: int = 32) -> float:
+    """S — serialized model size in bits (Eq. 15 numerator)."""
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    return float(n * bits_per_param)

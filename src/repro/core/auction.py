@@ -1,0 +1,137 @@
+"""Auction-based winner selection — Sec. V, Algorithm 1.
+
+Each diffusion round:
+
+1. every PUE computes its *valuation* of every model (Eq. 32): the decrement
+   of IID distance the model would gain by training on that PUE's data;
+2. bids (valuations) + CSI bundles (Eq. 34) go to the BS;
+3. the BS builds edge weights ``c(m, i) = v / B̃`` (Eq. 36) — zeroed when any
+   of constraints (18b) positive decrement, (18c) no retraining,
+   (18e) min-QoS/outage hold is violated;
+4. Kuhn–Munkres finds the max-weight matching (Eq. 38);
+5. the bandwidth budget (18f) is enforced by a greedy FCFS pass over the
+   matched edges in decreasing efficiency (Sec. V-C uses FCFS scheduling).
+
+Second-price bookkeeping: the winner of each model "pays" the second-highest
+feasible bid for that model; payments are recorded for incentive analysis but
+do not alter the schedule (standard Vickrey bookkeeping).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dol as dol_lib
+from repro.core.matching import max_weight_matching
+from repro.channels.resources import (outage_probability, required_bandwidth,
+                                      spectral_efficiency)
+
+__all__ = ["AuctionConfig", "AuctionResult", "compute_bids", "run_auction"]
+
+
+@dataclasses.dataclass
+class AuctionConfig:
+    gamma_min: float = 1.0          # minimum tolerable QoS (bit/s/Hz)
+    outage_max: float = 0.05        # P_out ≤ 5 % (Sec. V-C)
+    metric: str = "w1_norm"         # IID-distance metric
+    bandwidth_budget: float = np.inf  # Eq. (18f) cap on Σ B (Hz·s units)
+    model_bits: float = 1e6         # S — size of one serialized model
+    allow_retraining: bool = False  # Appendix C-D: drop constraint (18c)
+
+
+@dataclasses.dataclass
+class AuctionResult:
+    pairs: list[tuple[int, int]]            # (model, next-trainer PUE)
+    bandwidth: dict[int, float]             # model -> B̃ (Eq. 37)
+    efficiency: float                       # E(i*, B*) (Eq. 16)
+    decrements: dict[int, float]            # model -> δ (Eq. 17)
+    payments: dict[int, float]              # model -> second price
+    bids: np.ndarray                        # (M, N) valuation matrix
+    feasible: np.ndarray                    # (M, N) bool
+
+
+def compute_bids(state: dol_lib.DiffusionState, dsi: np.ndarray,
+                 data_sizes: np.ndarray, metric: str = "w1_norm"
+                 ) -> np.ndarray:
+    """Valuation matrix v[m, i] (Eq. 32): current minus candidate IID distance.
+
+    Positive where PUE i's data would pull model m's DoL toward uniform.
+    """
+    cur = dol_lib.iid_distance(np.asarray(state.dol), metric)       # (M,)
+    cand = dol_lib.iid_distance_candidates(
+        np.asarray(state.dol), np.asarray(state.chain_size),
+        np.asarray(dsi), np.asarray(data_sizes), metric)            # (M,N)
+    return np.asarray(cur)[:, None] - np.asarray(cand)
+
+
+def run_auction(state: dol_lib.DiffusionState, dsi: np.ndarray,
+                data_sizes: np.ndarray, gains_sq: np.ndarray,
+                mean_snr: np.ndarray, snr: np.ndarray,
+                config: AuctionConfig) -> AuctionResult:
+    """One diffusion-configuration step (Algorithm 1).
+
+    Args:
+      state:      diffusion bookkeeping (DoLs, chains, visited, holders).
+      dsi:        (N, C) client DSIs.
+      data_sizes: (N,) client dataset sizes.
+      gains_sq:   (N, N) sampled |g|^2 between PUEs (Eq. 12).
+      mean_snr:   (N, N) large-scale-only mean SNR (for Eq. 39 outage).
+      snr:        (N, N) instantaneous SNR (for Eq. 14 rate).
+      config:     auction parameters.
+    """
+    m_models, n_pues = state.visited.shape
+    bids = compute_bids(state, dsi, data_sizes, config.metric)       # (M,N)
+
+    gamma = spectral_efficiency(snr)                                 # (N,N)
+    # Per (model, PUE) edge: the link is holder(m) -> i.
+    hold = state.holder                                              # (M,)
+    gamma_edge = gamma[hold][:, np.arange(n_pues)]                   # (M,N)
+    pout_edge = outage_probability(config.gamma_min, mean_snr[hold]) # (M,N)
+
+    feasible = np.ones((m_models, n_pues), dtype=bool)
+    feasible &= bids > 0.0                                   # (18b)
+    if not config.allow_retraining:
+        feasible &= ~state.visited                           # (18c)
+    feasible &= gamma_edge >= config.gamma_min               # (18e) QoS
+    feasible &= pout_edge <= config.outage_max               # (39) outage
+    # A PUE does not transmit to itself.
+    feasible[np.arange(m_models), hold] = False
+
+    bw = required_bandwidth(config.model_bits, gamma_edge)           # (M,N)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        weight = np.where(feasible & np.isfinite(bw) & (bw > 0),
+                          bids / bw, 0.0)                            # Eq. 36
+
+    pairs = max_weight_matching(weight)  # enforces (18d): matching is 1-1
+
+    # (18f) bandwidth budget: FCFS over matched edges by decreasing efficiency.
+    pairs.sort(key=lambda mi: -weight[mi[0], mi[1]])
+    chosen: list[tuple[int, int]] = []
+    budget = config.bandwidth_budget
+    for m, i in pairs:
+        cost = bw[m, i]
+        if cost <= budget:
+            chosen.append((m, i))
+            budget -= cost
+
+    decrements = {m: float(bids[m, i]) for m, i in chosen}
+    bandwidth = {m: float(bw[m, i]) for m, i in chosen}
+
+    # Second-price payments: second-best feasible valuation for each model,
+    # capped at the winner's own bid (the matching optimizes *global*
+    # efficiency, so the winner need not be the model's top bidder).
+    payments = {}
+    for m, i in chosen:
+        others = bids[m][feasible[m]]
+        others = np.sort(others)[::-1]
+        second = float(others[1]) if others.size > 1 else 0.0
+        payments[m] = min(second, float(bids[m, i]))
+
+    eff = 0.0
+    if chosen:
+        eff = float(np.mean([decrements[m] / bandwidth[m] for m, _ in chosen
+                             if bandwidth[m] > 0]))
+    return AuctionResult(pairs=chosen, bandwidth=bandwidth, efficiency=eff,
+                         decrements=decrements, payments=payments,
+                         bids=bids, feasible=feasible)

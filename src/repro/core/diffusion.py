@@ -1,0 +1,176 @@
+"""Diffusion-round planner — the control plane of Algorithm 2 (lines 14–26).
+
+``plan_communication_round`` runs the DoL-broadcast → bid → auction →
+schedule loop until the halting condition ``W1(ψ, U) ≤ ε`` holds for every
+model (or no feasible pair remains), producing a :class:`DiffusionPlan`:
+the per-diffusion-round list of (model, src PUE, dst PUE, γ, bandwidth).
+
+The plan is *pure scheduling* — no training happens here.  The FL runtime
+(``repro.fl.server``) executes a plan by running local updates and parameter
+transfers (host mode) or ppermute collectives (SPMD mode), and the launcher
+replays plans on the production mesh.  This mirrors the paper's split between
+PUCCH control signalling and PUSCH model transmission.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.channels.fading import ChannelModel
+from repro.channels.resources import spectral_efficiency
+from repro.channels.topology import CellTopology
+from repro.core import dol as dol_lib
+from repro.core.auction import AuctionConfig, AuctionResult, run_auction
+
+__all__ = ["DiffusionHop", "DiffusionPlan", "DiffusionPlanner"]
+
+
+@dataclasses.dataclass
+class DiffusionHop:
+    model: int
+    src: int
+    dst: int
+    gamma: float            # spectral efficiency of the scheduled link
+    bandwidth: float        # Eq. 15 cost (Hz·s)
+    decrement: float        # δ (Eq. 17)
+    round_index: int
+
+
+@dataclasses.dataclass
+class DiffusionPlan:
+    hops: list[DiffusionHop]
+    num_rounds: int
+    final_iid_distance: np.ndarray      # (M,)
+    efficiency_per_round: list[float]
+
+    def hops_in_round(self, k: int) -> list[DiffusionHop]:
+        return [h for h in self.hops if h.round_index == k]
+
+    def as_permutations(self, num_clients: int
+                        ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-round (permutation, train_mask) for the SPMD ppermute path.
+
+        The auction's matching is *partial* (some models stay put), but
+        ``jax.lax.ppermute`` needs a bijection over client slots.  We complete
+        the partial mapping src→dst to a permutation: unscheduled sources are
+        matched to leftover destinations (these slots carry models that will
+        NOT train this round — ``train_mask`` marks the slots whose freshly
+        received model performs a local update, i.e. the scheduled dsts).
+
+        perm[k][c] = slot that receives slot c's buffer in round k.
+
+        Internally tracks ``slot_of_model`` with the invariant that each slot
+        holds at most one model (the paper allows a PUE to *hold* several
+        models; an SPMD buffer cannot, so displaced idle models are "parked"
+        in a free slot — an upper bound on communication, excluded from the
+        ledger since the real system would not move them).
+        """
+        num_models = (max(h.model for h in self.hops) + 1) if self.hops else 0
+        slot_of_model = np.arange(num_models) % max(num_clients, 1)
+        out = []
+        for k in range(self.num_rounds):
+            hops = self.hops_in_round(k)
+            mask = np.zeros(num_clients, dtype=bool)
+            perm = np.full(num_clients, -1, dtype=np.int64)
+            used_dst: set[int] = set()
+            for h in hops:
+                src = int(slot_of_model[h.model])
+                assert h.dst not in used_dst, "matching must be 1-1 over dsts"
+                assert perm[src] == -1, "slot invariant violated"
+                perm[src] = h.dst
+                used_dst.add(h.dst)
+                mask[h.dst] = True
+            # Complete the partial mapping to a bijection (identity where
+            # possible, otherwise any unused destination: "parking" transfers
+            # for displaced idle buffers).
+            free = [d for d in range(num_clients) if d not in used_dst]
+            for src in range(num_clients):
+                if perm[src] >= 0:
+                    continue
+                if src not in used_dst:
+                    perm[src] = src
+                    used_dst.add(src)
+                    free.remove(src)
+                else:
+                    perm[src] = free.pop(0)
+                    used_dst.add(int(perm[src]))
+            assert sorted(perm.tolist()) == list(range(num_clients)), perm
+            # Every buffer moves by the bijection; slot uniqueness preserved.
+            slot_of_model = perm[slot_of_model]
+            out.append((perm, mask))
+        return out
+
+
+class DiffusionPlanner:
+    """Plans all diffusion rounds of one communication round."""
+
+    def __init__(self, topology: CellTopology | None = None,
+                 channel: ChannelModel | None = None,
+                 auction: AuctionConfig | None = None,
+                 epsilon: float = 0.04,
+                 max_rounds: int | None = None,
+                 underlay: bool = False):
+        self.topology = topology or CellTopology()
+        self.channel = channel or ChannelModel()
+        self.auction = auction or AuctionConfig()
+        self.epsilon = epsilon          # minimum tolerable IID distance
+        self.max_rounds = max_rounds
+        self.underlay = underlay        # Appendix C-F: D2D reuses CUE PRBs
+
+    def plan_communication_round(
+            self, state: dol_lib.DiffusionState, dsi: np.ndarray,
+            data_sizes: np.ndarray, rng: np.random.Generator,
+            positions: np.ndarray | None = None) -> DiffusionPlan:
+        """Runs auctions until halting; mutates ``state`` with visited sets."""
+        n = dsi.shape[0]
+        if positions is None:
+            positions = self.topology.sample_positions(rng, n)
+        dist = self.topology.pairwise_distances(positions)
+        beta = 10 ** (self.channel.large_scale_db(dist) / 10.0)
+        mean_snr = self.channel.snr(beta)      # Rayleigh power marginalized
+
+        hops: list[DiffusionHop] = []
+        eff_hist: list[float] = []
+        # Worst case O(N_P(N_P-1)) rounds (Sec. V-D); each PUE trains each
+        # model at most once, so N_P rounds suffice when all M hop per round.
+        max_rounds = self.max_rounds or n * (n - 1)
+        k = 0
+        while k < max_rounds:
+            iid = state.iid_distances(self.auction.metric)
+            active = iid > self.epsilon
+            if not self.auction.allow_retraining:
+                # Models at chain length N visited everyone (full diffusion).
+                active &= ~state.visited.all(axis=1)
+            if not active.any():
+                break
+            gains = self.channel.sample_gains(dist, rng)
+            interference = 0.0
+            if self.underlay:
+                n_cues = rng.poisson(self.topology.cue_rate)
+                interference = self.channel.sample_cue_interference(
+                    rng, n_cues, self.topology.radius_m)
+            snr = self.channel.snr(gains, interference)
+            result = run_auction(state, dsi, data_sizes, gains, mean_snr,
+                                 snr, self.auction)
+            # Only schedule hops for still-active models.
+            scheduled = [(m, i) for m, i in result.pairs if active[m]]
+            if not scheduled:
+                break
+            k += 1
+            gamma = spectral_efficiency(snr)
+            for m, i in scheduled:
+                src = int(state.holder[m])
+                hops.append(DiffusionHop(
+                    model=m, src=src, dst=i,
+                    gamma=float(gamma[src, i]),
+                    bandwidth=result.bandwidth[m],
+                    decrement=result.decrements[m],
+                    round_index=k - 1))
+                state.record_training(m, i, dsi[i], float(data_sizes[i]))
+            eff_hist.append(result.efficiency)
+        state.round_index += k
+        return DiffusionPlan(hops=hops, num_rounds=k,
+                             final_iid_distance=state.iid_distances(
+                                 self.auction.metric),
+                             efficiency_per_round=eff_hist)

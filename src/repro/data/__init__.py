@@ -1,0 +1,4 @@
+from repro.data.partitioner import ClientPartition, dirichlet_partition
+from repro.data.synthetic import (ImageDataset, gaussian_image_dataset,
+                                  lm_corpus, class_labels_for_lm)
+from repro.data.pipeline import ClientLoader, make_client_loaders, lm_batches

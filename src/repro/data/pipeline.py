@@ -1,0 +1,59 @@
+"""Per-client data pipeline: shuffled epoch iterators, batching, LM chunking.
+
+Host-side numpy (the FL control plane), emitting device-ready dict batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.partitioner import ClientPartition
+from repro.data.synthetic import ImageDataset
+
+__all__ = ["ClientLoader", "make_client_loaders", "lm_batches"]
+
+
+@dataclasses.dataclass
+class ClientLoader:
+    x: np.ndarray
+    y: np.ndarray
+    batch_size: int
+    seed: int
+    _epoch: int = 0
+
+    def num_batches(self) -> int:
+        return max(1, len(self.y) // self.batch_size)
+
+    def epoch(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed + self._epoch)
+        self._epoch += 1
+        perm = rng.permutation(len(self.y))
+        nb = self.num_batches()
+        for i in range(nb):
+            idx = perm[i * self.batch_size:(i + 1) * self.batch_size]
+            if len(idx) < self.batch_size:   # wrap-around pad
+                idx = np.concatenate([idx, perm[:self.batch_size - len(idx)]])
+            yield {"x": self.x[idx], "y": self.y[idx]}
+
+    def one_batch(self) -> dict:
+        return next(self.epoch())
+
+
+def make_client_loaders(ds: ImageDataset, part: ClientPartition,
+                        batch_size: int, seed: int = 0) -> list[ClientLoader]:
+    return [ClientLoader(ds.x[ix], ds.y[ix], batch_size, seed + 1000 * i)
+            for i, ix in enumerate(part.indices)]
+
+
+def lm_batches(tokens: np.ndarray, batch: int, seq_len: int, seed: int = 0
+               ) -> Iterator[dict]:
+    """Infinite iterator of (tokens, labels) LM batches."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq_len - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        xs = np.stack([tokens[s:s + seq_len] for s in starts])
+        ys = np.stack([tokens[s + 1:s + seq_len + 1] for s in starts])
+        yield {"tokens": xs.astype(np.int32), "labels": ys.astype(np.int32)}

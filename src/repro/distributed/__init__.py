@@ -1,0 +1,4 @@
+from repro.distributed import sharding
+from repro.distributed.fedshard import (make_fleet_train_step,
+                                        make_diffusion_step, fleet_aggregate,
+                                        diffuse_params)

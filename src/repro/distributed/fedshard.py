@@ -1,0 +1,129 @@
+"""SPMD FedDif data plane: client-stacked training, diffusion exchange, and
+weighted aggregation as jit-compiled collectives.
+
+Mapping (DESIGN.md §2): FL clients are stacked on a leading axis of every
+state/batch leaf, sharded over a *client axis* of the mesh — ``pod`` on the
+2×16×16 multi-pod mesh (one client per pod: the faithful pod-scale regime)
+or ``data`` on-pod for paper-scale fleets (M ≈ 10 small models).
+
+* local step      = ``jax.vmap(train_step)`` over the client axis
+* diffusion hop   = ``take(params, perm, axis=0)`` — XLA lowers the gather
+  across the client-sharded axis to a collective-permute, which IS the
+  paper's D2D model transmission (Eq. 15's S bits on the wire)
+* aggregation     = data-size-weighted mean over the client axis (Eq. 11),
+  lowered to an all-reduce
+* selective training (auction winners only) = `train_mask` select between
+  updated and carried state — FedDif's partial participation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+from repro.train import optimizer as opt_lib
+from repro.train.trainstep import TrainState, make_train_step
+
+Params = Any
+
+__all__ = ["make_fleet_train_step", "make_diffusion_step", "fleet_aggregate",
+           "diffuse_params"]
+
+
+def diffuse_params(params: Params, perm: jax.Array) -> Params:
+    """One diffusion round: model in client-slot c moves to slot perm[c].
+
+    ``perm`` is the *destination-major* gather index: new[c] = old[src[c]];
+    callers pass ``src_of_dst`` (inverse of the planner's perm).
+    """
+    return jax.tree.map(lambda x: jnp.take(x, perm, axis=0), params)
+
+
+def fleet_aggregate(params: Params, weights: jax.Array) -> Params:
+    """Eq. (11): weighted FedAvg over the leading client axis -> broadcast
+    back to every client slot (the BS broadcast of the next round)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+    def one(x):
+        avg = jnp.tensordot(w.astype(jnp.float32),
+                            x.astype(jnp.float32), axes=(0, 0))
+        return jnp.broadcast_to(avg[None], x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def make_fleet_train_step(model: Model, opt: opt_lib.Optimizer,
+                          lr: float = 0.01, remat: bool = True):
+    """vmapped local update over the leading client axis."""
+    step = make_train_step(model, opt, opt_lib.constant_lr(lr), remat=remat)
+    return jax.vmap(step)
+
+
+def make_diffusion_step(model: Model, opt: opt_lib.Optimizer,
+                        lr: float = 0.01, remat: bool = True) -> Callable:
+    """One full FedDif diffusion round over a client-stacked fleet.
+
+    Args of the returned function:
+      state:      TrainState with leading client axis C on every leaf.
+      batch:      per-client batches, leading axis C.
+      src_of_dst: (C,) int32 — slot c receives the model from src_of_dst[c].
+      train_mask: (C,) bool — True where the receiving client trains
+                  (auction winners; constraint 18d).
+      weights:    (C,) float — chain data sizes for the final aggregation
+                  (pass None to skip aggregation — mid-round hop).
+    """
+    fleet_step = make_fleet_train_step(model, opt, lr, remat)
+    from repro.models.layers import perf_opt_enabled
+    params_only = perf_opt_enabled("params_only_diffusion")
+    wire_bf16 = perf_opt_enabled("wire_bf16")
+
+    def _move(tree, perm):
+        if not wire_bf16:
+            return diffuse_params(tree, perm)
+        # §Perf P3: D2D hops ship bf16 (the paper ships fp32 — Table II
+        # charges 32 b/param); master copies stay fp32 locally.  The
+        # optimization barrier pins the convert BEFORE the cross-pod gather
+        # — without it XLA may legally move the (elementwise) convert to
+        # the receiving side and put fp32 on the wire.
+        down = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if x.dtype == jnp.float32 else x, tree)
+        down = jax.lax.optimization_barrier(down)
+        moved = diffuse_params(down, perm)
+        return jax.tree.map(lambda m, ref: m.astype(ref.dtype), moved, tree)
+
+    def diffusion_step(state: TrainState, batch, src_of_dst, train_mask,
+                       weights=None):
+        # 1. D2D model transmission (collective-permute over client axis).
+        #    §Perf P3: the paper's PUSCH payload is the MODEL only — every
+        #    hop starts a fresh local SGD session at the receiving PUE
+        #    (client.py semantics), so moving the optimizer state wastes
+        #    wire bytes; momentum restarts from zero instead.
+        if params_only:
+            opt_state = jax.tree.map(
+                lambda x: jnp.zeros_like(x)
+                if x.dtype in (jnp.float32, jnp.bfloat16) else x,
+                state.opt_state)
+        else:
+            opt_state = diffuse_params(state.opt_state, src_of_dst)
+        moved = TrainState(
+            params=_move(state.params, src_of_dst),
+            opt_state=opt_state,
+            step=state.step)
+        # 2. Local update at the receiving clients.
+        trained, metrics = fleet_step(moved, batch)
+        # 3. Winners keep the trained model; others carry the received one.
+        def select(a, b):
+            m = train_mask.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(m, a, b)
+        out = jax.tree.map(select, trained, moved)
+        # 4. Optional global aggregation (end of the communication round).
+        if weights is not None:
+            out = TrainState(params=fleet_aggregate(out.params, weights),
+                             opt_state=out.opt_state, step=out.step)
+        return out, metrics
+
+    return diffusion_step

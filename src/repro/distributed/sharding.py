@@ -1,0 +1,264 @@
+"""Per-architecture sharding rules (PartitionSpec pytrees).
+
+Scheme (DESIGN.md §5): tensor/expert parallelism over the ``model`` mesh
+axis, optional FSDP over ``data``, pure data parallelism for the batch, and
+sequence-sharded KV caches for decode.  Rules are matched on the flattened
+parameter path; stacked-layer prefixes (``segments/``, ``enc_layers/``,
+``dec_layers/``) transparently add a leading replicated dim.
+
+Uneven shardings (e.g. whisper's 51865 vocab over 16) are allowed — XLA SPMD
+pads internally.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
+           "needs_fsdp", "named", "MODEL_AXIS", "DATA_AXIS"]
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+
+# (regex on leaf path, spec factory(shape, fsdp) -> PartitionSpec)
+# First match wins.  `d` = the FSDP axis (None when fsdp disabled).
+_RULES: list[tuple[str, Any]] = [
+    # --- embeddings / heads ---
+    (r"embed/table$",        lambda s, d: P(MODEL_AXIS, d)),
+    (r"lm_head/w$",          lambda s, d: P(d, MODEL_AXIS)),
+    # --- attention ---
+    (r"w[qkv]/w$",           lambda s, d: P(d, MODEL_AXIS)),
+    (r"wo/w$",               lambda s, d: P(MODEL_AXIS, d)),
+    (r"[qk]_norm/scale$",    lambda s, d: P(None)),
+    # --- dense MLP (SwiGLU + whisper GELU) ---
+    (r"mlp/w_gate/w$",       lambda s, d: P(d, MODEL_AXIS)),
+    (r"mlp/w_up/w$",         lambda s, d: P(d, MODEL_AXIS)),
+    (r"mlp/w_down/w$",       lambda s, d: P(MODEL_AXIS, d)),
+    (r"mlp/w1/w$",           lambda s, d: P(d, MODEL_AXIS)),
+    (r"mlp/w2/w$",           lambda s, d: P(MODEL_AXIS, d)),
+    # --- MoE (expert-parallel when E % axis == 0, else intra-expert TP) ---
+    (r"moe/router/w$",       lambda s, d: P(d, None)),
+    (r"moe/w_gate$",         "_moe_in"),
+    (r"moe/w_up$",           "_moe_in"),
+    (r"moe/w_down$",         "_moe_out"),
+    (r"moe/shared/w_gate/w$", lambda s, d: P(d, MODEL_AXIS)),
+    (r"moe/shared/w_up/w$",  lambda s, d: P(d, MODEL_AXIS)),
+    (r"moe/shared/w_down/w$", lambda s, d: P(MODEL_AXIS, d)),
+    # --- Mamba-1 ---
+    (r"mamba/in_proj/w$",    lambda s, d: P(d, MODEL_AXIS)),
+    (r"mamba/conv_w$",       lambda s, d: P(None, MODEL_AXIS)),
+    (r"mamba/conv_b$",       lambda s, d: P(MODEL_AXIS)),
+    (r"mamba/x_proj/w$",     lambda s, d: P(MODEL_AXIS, None)),
+    (r"mamba/dt_proj/w$",    lambda s, d: P(None, MODEL_AXIS)),
+    (r"mamba/dt_proj/b$",    lambda s, d: P(MODEL_AXIS)),
+    (r"mamba/a_log$",        lambda s, d: (P(MODEL_AXIS, None) if len(s) == 2
+                                           else P(MODEL_AXIS))),
+    (r"mamba/d_skip$",       lambda s, d: P(MODEL_AXIS)),
+    (r"mamba/out_proj/w$",   lambda s, d: P(MODEL_AXIS, d)),
+    # --- Mamba-2 ---
+    (r"mamba/w_zx/w$",       lambda s, d: P(d, MODEL_AXIS)),
+    (r"mamba/w_bc/w$",       lambda s, d: P(d, None)),
+    (r"mamba/w_dt/w$",       lambda s, d: P(d, MODEL_AXIS)),
+    (r"mamba/conv_x/w$",     lambda s, d: P(None, MODEL_AXIS)),
+    (r"mamba/conv_x/b$",     lambda s, d: P(MODEL_AXIS)),
+    (r"mamba/conv_bc/[wb]$", lambda s, d: P(None)),
+    (r"mamba/dt_bias$",      lambda s, d: P(MODEL_AXIS)),
+    (r"mamba/out_norm/scale$", lambda s, d: P(MODEL_AXIS)),
+    # --- norms & scalars ---
+    (r"(ln\d?|ln_x|final_norm|enc_norm|dec_norm)/(scale|bias)$",
+     lambda s, d: P(None)),
+]
+
+
+def _moe_spec_in(shape, d, model_size):
+    e = shape[0]
+    if e % model_size == 0:
+        return P(MODEL_AXIS, d, None)       # expert parallel
+    return P(None, d, MODEL_AXIS)           # intra-expert TP (mixtral: E=8)
+
+
+def _moe_spec_out(shape, d, model_size):
+    e = shape[0]
+    if e % model_size == 0:
+        return P(MODEL_AXIS, None, d)
+    return P(None, MODEL_AXIS, d)
+
+
+_STACK_PREFIXES = ("segments/", "enc_layers", "dec_layers")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(getattr(p, "name", p)))
+    return "/".join(parts)
+
+
+def needs_fsdp(cfg: ModelConfig, model_size: int = 16,
+               hbm_budget_bytes: float = 8e9) -> bool:
+    """FSDP over `data` when fp32 params + momentum per TP shard exceed
+    half the HBM budget (leaving room for activations)."""
+    bytes_per_shard = cfg.param_count() * 8.0 / model_size
+    return bytes_per_shard > hbm_budget_bytes / 2
+
+
+def param_specs(params_or_shapes: Any, cfg: ModelConfig, mesh,
+                fsdp: bool | None = None) -> Any:
+    """PartitionSpec pytree matching the parameter pytree."""
+    model_size = mesh.shape[MODEL_AXIS]
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, model_size)
+    d = DATA_AXIS if fsdp else None
+
+    axis_sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+
+    def fit(spec: P, shape: tuple) -> P:
+        """Drop mesh axes whose size does not divide the dim (jit requires
+        exact divisibility for explicit in_shardings — e.g. whisper's 51865
+        vocab over 16)."""
+        out = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([axis_sizes[a] for a in axes]))
+            out.append(ax if dim % total == 0 else None)
+        return P(*out)
+
+    def one(path, leaf) -> P:
+        pstr = _path_str(path)
+        stacked = pstr.startswith("segments/") or "_layers/" in pstr \
+            or pstr.startswith(("enc_layers", "dec_layers"))
+        shape = tuple(leaf.shape)
+        core_shape = shape[1:] if stacked else shape
+        for pattern, fn in _RULES:
+            if re.search(pattern, pstr):
+                if fn == "_moe_in":
+                    spec = _moe_spec_in(core_shape, d, model_size)
+                elif fn == "_moe_out":
+                    spec = _moe_spec_out(core_shape, d, model_size)
+                else:
+                    spec = fn(core_shape, d)
+                if len(spec) > len(core_shape):
+                    spec = P(*spec[:len(core_shape)])
+                spec = fit(spec, core_shape)
+                if stacked:
+                    spec = P(None, *spec)
+                return spec
+        # default: replicate
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+def batch_specs(batch: Any, shape_cfg: ShapeConfig, mesh) -> Any:
+    """Input batch sharding: batch dim over every data-parallel axis."""
+    dp_axes = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def one(path, leaf):
+        b = leaf.shape[0]
+        if b % dp_size == 0:
+            lead = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return P(lead, *([None] * (len(leaf.shape) - 1)))
+        # tiny global batch (long_500k): replicate batch dim
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cache: Any, shape_cfg: ShapeConfig, mesh) -> Any:
+    """KV/SSM cache sharding for decode.
+
+    Attention K/V  (layers, B, S, KH, hd): batch over data axes, sequence
+    over ``model`` (flash-decoding combine).  When the batch is too small to
+    shard (long_500k B=1) the sequence is sharded over (data, model).
+    SSM conv/h states: batch over data, channel/head dim over model.
+    """
+    dp_axes = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    axis_sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+
+    def fit(spec: P, shape: tuple) -> P:
+        out = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([axis_sizes[a] for a in axes]))
+            out.append(ax if dim % total == 0 else None)
+        return P(*out)
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        batch_ok = shape[1] % dp_size == 0 if len(shape) > 1 else False
+        if re.search(r"/[kv]$", pstr):      # (L, B, S, KH, hd)
+            if batch_ok:
+                return fit(P(None, dp, MODEL_AXIS, None, None), shape)
+            return fit(P(None, None, (*dp_axes, MODEL_AXIS), None, None),
+                       shape)
+        if pstr.endswith("/h"):             # mamba1 (L,B,di,N) / m2 (L,B,H,P,N)
+            bspec = dp if batch_ok else None
+            if len(shape) == 4:
+                return fit(P(None, bspec, MODEL_AXIS, None), shape)
+            return fit(P(None, bspec, MODEL_AXIS, None, None), shape)
+        if "conv" in pstr:                  # (L, B, k-1, C)
+            bspec = dp if batch_ok else None
+            if pstr.endswith("bc"):
+                return fit(P(None, bspec, None, None), shape)
+            return fit(P(None, bspec, None, MODEL_AXIS), shape)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def state_specs(pspecs: Any, opt_state_like: Any) -> Any:
+    """TrainState sharding: opt moments mirror param specs; step replicated."""
+    from repro.train.trainstep import TrainState
+
+    def opt_map(subtree):
+        # opt states are dicts whose leaves mirror params ('mu', 'm', 'v')
+        def one(path, leaf):
+            return leaf
+        return subtree
+
+    # Build opt-state specs by structural recursion: every leaf of the opt
+    # state that has the same path suffix as a param gets that param's spec.
+    flat_p = {_path_str(p): s for p, s in
+              jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        # strip the leading moment name (mu/m/v)
+        for prefix in ("mu/", "m/", "v/"):
+            if pstr.startswith(prefix):
+                suffix = pstr[len(prefix):]
+                if suffix in flat_p:
+                    return flat_p[suffix]
+        if pstr in ("count",):
+            return P()
+        return P(*([None] * len(getattr(leaf, "shape", ()))))
+
+    ospecs = jax.tree_util.tree_map_with_path(one, opt_state_like)
+    return TrainState(params=pspecs, opt_state=ospecs,
+                      step=P())
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,63 @@
+"""FL client: the LocalUpdate of Algorithm 2 (lines 31–37).
+
+Generic over any trainable exposing ``loss(params, batch)`` — used both with
+the paper's small task models (``repro.fl.models``) and the assigned LM
+architectures (``repro.models.zoo.Model``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.train import optimizer as opt_lib
+
+Params = Any
+
+__all__ = ["make_local_update", "local_update"]
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_step(loss_id: int, loss_fn: Callable, momentum: float,
+                 clip: float | None):
+    opt = opt_lib.sgd(momentum=momentum)
+
+    @jax.jit
+    def step(params, mu, batch, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch))(params)
+        if clip is not None:
+            grads, _ = opt_lib.clip_by_global_norm(grads, clip)
+        updates, new_state = opt.update(grads, {"mu": mu}, params, lr)
+        return opt_lib.apply_updates(params, updates), new_state["mu"], loss
+
+    return step
+
+
+def make_local_update(loss_fn: Callable, momentum: float = 0.9,
+                      clip: float | None = 10.0):
+    """Returns ``local_update(params, batches, lr) -> (params, mean_loss)``.
+
+    Momentum is reset per local session, as each hop of the paper's
+    diffusion restarts SGD on the receiving PUE (the BS only ships model
+    parameters, not optimizer state, over PUSCH).
+    """
+    step = _jitted_step(id(loss_fn), loss_fn, momentum, clip)
+
+    def local_update(params: Params, batches: Iterable[dict], lr: float):
+        mu = jax.tree.map(lambda p: jax.numpy.zeros_like(
+            p, jax.numpy.float32), params)
+        total, n = 0.0, 0
+        for batch in batches:
+            params, mu, loss = step(params, mu, batch, lr)
+            total += float(loss)
+            n += 1
+        return params, (total / max(n, 1))
+
+    return local_update
+
+
+def local_update(loss_fn: Callable, params: Params, batches: Iterable[dict],
+                 lr: float = 0.01, momentum: float = 0.9) -> tuple[Params, float]:
+    return make_local_update(loss_fn, momentum)(params, batches, lr)

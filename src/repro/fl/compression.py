@@ -1,0 +1,49 @@
+"""Sparse Ternary Compression (STC) — Sattler et al. [41], the paper's
+model-compression baseline (Table II).
+
+STC sends, per tensor: the indices of the top-``p`` fraction of entries by
+magnitude and a single magnitude ``μ`` (the mean of the selected magnitudes),
+with signs — i.e. the tensor is approximated by ``μ·(sign ∘ top-k mask)``.
+
+``compressed_bits`` follows the paper's accounting: Golomb-ish index cost
+≈ ``k·(log2(n/k)+2)`` bits + 1 sign bit per kept entry + 32 bits for μ.
+
+The host path lives here; the TPU Pallas kernel is
+``repro.kernels.stc_compress`` (same semantics, validated against this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["stc_compress_leaf", "stc_compress", "compressed_bits"]
+
+
+def stc_compress_leaf(x: jax.Array, sparsity: float = 0.01) -> jax.Array:
+    """Ternarize one tensor, keeping the top-``sparsity`` fraction."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = max(1, int(n * sparsity))
+    mag = jnp.abs(flat)
+    topv, topi = jax.lax.top_k(mag, k)
+    mu = jnp.mean(topv)
+    out = jnp.zeros_like(flat)
+    out = out.at[topi].set(jnp.sign(flat[topi]) * mu)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def stc_compress(tree: Any, sparsity: float = 0.01) -> Any:
+    return jax.tree.map(lambda x: stc_compress_leaf(x, sparsity), tree)
+
+
+def compressed_bits(tree: Any, sparsity: float = 0.01) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(leaf.shape))
+        k = max(1, int(n * sparsity))
+        total += k * (math.log2(max(n / k, 2.0)) + 2.0) + k + 32.0
+    return total

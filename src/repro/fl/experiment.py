@@ -1,0 +1,62 @@
+"""High-level experiment harness: dataset → partition → run_federated.
+
+One call reproduces one cell of the paper's figures/tables; the benchmark
+scripts sweep it over α (Fig. 3), ε (Fig. 4), γ_min (Fig. 5), ML task
+(Fig. 6 / Table I) and strategy (Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.data.partitioner import dirichlet_partition
+from repro.data.pipeline import make_client_loaders
+from repro.data.synthetic import gaussian_image_dataset
+from repro.fl.models import build_task_model
+from repro.fl.server import FLConfig, FLResult, run_federated
+
+__all__ = ["ExperimentSpec", "run_experiment"]
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    task: str = "fcn"                  # logistic|svm|fcn|lstm|cnn
+    alpha: float = 1.0                 # Dirichlet concentration
+    num_samples: int = 12_000
+    num_classes: int = 10
+    dim: int = 64
+    test_frac: float = 0.2
+    fl: FLConfig = dataclasses.field(default_factory=FLConfig)
+    data_seed: int = 0
+
+
+def run_experiment(spec: ExperimentSpec) -> FLResult:
+    rng = np.random.default_rng(spec.data_seed)
+    ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
+                                seed=spec.data_seed)
+    test, train = ds.split(spec.test_frac, rng)
+
+    part = dirichlet_partition(train.y, spec.fl.num_clients, spec.alpha, rng)
+    loaders = make_client_loaders(train, part, spec.fl.batch_size,
+                                  seed=spec.data_seed)
+    model = build_task_model(spec.task, spec.dim, spec.num_classes)
+
+    def client_epoch(i):
+        return lambda: list(loaders[i].epoch())
+
+    batches = [client_epoch(i) for i in range(spec.fl.num_clients)]
+
+    @jax.jit
+    def _eval(params):
+        acc = model.accuracy(params, test.x, test.y)
+        loss = model.loss(params, {"x": test.x, "y": test.y})
+        return acc, loss
+
+    def eval_fn(params):
+        a, l = _eval(params)
+        return float(a), float(l)
+
+    return run_federated(model.init, model.loss, batches, part.dsi,
+                         part.data_sizes, eval_fn, spec.fl)

@@ -1,0 +1,169 @@
+"""The paper's evaluation models (Sec. VI-A): FCN, CNN, LSTM, SVM, logistic.
+
+Implemented for the synthetic image dataset (D-dim feature vectors standing
+in for CIFAR-10/FMNIST — see DESIGN.md §1): CNN reshapes features to an
+8×8 "image", LSTM consumes them as a length-8 sequence.  All expose
+``init(key) -> params``, ``loss(params, batch) -> scalar``,
+``predict(params, x) -> labels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Any
+
+__all__ = ["TaskModel", "build_task_model", "TASK_MODELS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskModel:
+    name: str
+    init: Callable[[Array], Params]
+    logits: Callable[[Params, Array], Array]
+    loss: Callable[[Params, dict], Array]
+
+    def predict(self, params: Params, x: Array) -> Array:
+        return jnp.argmax(self.logits(params, x), axis=-1)
+
+    def accuracy(self, params: Params, x: Array, y: Array) -> Array:
+        return jnp.mean((self.predict(params, x) == y).astype(jnp.float32))
+
+
+def _xent(logits: Array, y: Array) -> Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _hinge(logits: Array, y: Array) -> Array:
+    """Multiclass (Crammer–Singer) hinge — the SVM task."""
+    c = logits.shape[-1]
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)
+    margins = logits - gold + 1.0
+    margins = margins * (1.0 - jax.nn.one_hot(y, c))
+    return jnp.mean(jnp.max(margins, axis=-1))
+
+
+def _dense_stack(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a),
+             "b": jnp.zeros((b,), jnp.float32)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, act=jax.nn.relu):
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+def build_task_model(name: str, dim: int = 64, num_classes: int = 10,
+                     hidden: int = 128) -> TaskModel:
+    if name == "logistic":
+        def init(key):
+            return _dense_stack(key, [dim, num_classes])
+        def logits(p, x):
+            return _mlp_apply(p, x)
+        return TaskModel(name, init, logits,
+                         lambda p, b: _xent(logits(p, b["x"]), b["y"]))
+
+    if name == "svm":
+        def init(key):
+            return _dense_stack(key, [dim, num_classes])
+        def logits(p, x):
+            return _mlp_apply(p, x)
+        return TaskModel(name, init, logits,
+                         lambda p, b: _hinge(logits(p, b["x"]), b["y"])
+                         + 1e-4 * sum(jnp.sum(q["w"] ** 2) for q in p))
+
+    if name == "fcn":
+        def init(key):
+            return _dense_stack(key, [dim, hidden, hidden, num_classes])
+        def logits(p, x):
+            return _mlp_apply(p, x)
+        return TaskModel(name, init, logits,
+                         lambda p, b: _xent(logits(p, b["x"]), b["y"]))
+
+    if name == "cnn":
+        side = int(dim ** 0.5)
+        assert side * side == dim, "cnn task needs square feature dim"
+
+        def init(key):
+            k1, k2, k3, k4 = jax.random.split(key, 4)
+            return {
+                "c1": jax.random.normal(k1, (3, 3, 1, 16)) * 0.2,
+                "c2": jax.random.normal(k2, (3, 3, 16, 32)) * 0.1,
+                "head": _dense_stack(k3, [32 * (side // 4) ** 2, hidden,
+                                          num_classes]),
+            }
+
+        def logits(p, x):
+            b = x.shape[0]
+            img = x.reshape(b, side, side, 1)
+            h = jax.lax.conv_general_dilated(
+                img, p["c1"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(h)
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            h = jax.lax.conv_general_dilated(
+                h, p["c2"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = jax.nn.relu(h)
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            return _mlp_apply(p["head"], h.reshape(b, -1))
+
+        return TaskModel(name, init, logits,
+                         lambda p, b: _xent(logits(p, b["x"]), b["y"]))
+
+    if name == "lstm":
+        steps = 8
+        feat = dim // steps
+
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            h = hidden
+            return {
+                "wx": jax.random.normal(k1, (feat, 4 * h)) / jnp.sqrt(feat),
+                "wh": jax.random.normal(k2, (h, 4 * h)) / jnp.sqrt(h),
+                "b": jnp.zeros((4 * h,)),
+                "head": _dense_stack(jax.random.fold_in(key, 7),
+                                     [h, num_classes]),
+            }
+
+        def logits(p, x):
+            b = x.shape[0]
+            seq = x.reshape(b, steps, feat)
+            h = hidden
+
+            def cell(carry, xt):
+                hprev, cprev = carry
+                z = xt @ p["wx"] + hprev @ p["wh"] + p["b"]
+                i, f, g, o = jnp.split(z, 4, axis=-1)
+                c = jax.nn.sigmoid(f + 1.0) * cprev \
+                    + jax.nn.sigmoid(i) * jnp.tanh(g)
+                hn = jax.nn.sigmoid(o) * jnp.tanh(c)
+                return (hn, c), None
+
+            (hT, _), _ = jax.lax.scan(cell,
+                                      (jnp.zeros((b, h)), jnp.zeros((b, h))),
+                                      jnp.moveaxis(seq, 1, 0))
+            return _mlp_apply(p["head"], hT)
+
+        return TaskModel(name, init, logits,
+                         lambda p, b: _xent(logits(p, b["x"]), b["y"]))
+
+    raise ValueError(f"unknown task model {name!r}")
+
+
+TASK_MODELS = ("logistic", "svm", "fcn", "lstm", "cnn")

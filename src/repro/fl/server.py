@@ -1,0 +1,361 @@
+"""FL server runtime: FedDif (Algorithm 2) plus every comparison strategy of
+Sec. VI — FedAvg [1], FedSwap [21] (full diffusion, no auction), STC [41]
+(compressed uplink), TT-HF-like [22] (semi-decentralized cluster averaging),
+and D-PSGD-style gossip (fully decentralized; Appendix C Scenario 1).
+
+The runtime is model-agnostic: pass any ``loss_fn(params, batch)`` +
+``init_fn(key)`` + per-client batch iterators.  Communication is charged to a
+:class:`ResourceLedger` through the simulated wireless channel (Sec. III-D),
+reproducing the paper's sub-frame / transmitted-model metrics.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.channels.fading import ChannelModel
+from repro.channels.resources import ResourceLedger, spectral_efficiency
+from repro.channels.topology import CellTopology
+from repro.core import aggregation as agg
+from repro.core.auction import AuctionConfig
+from repro.core.diffusion import DiffusionPlanner
+from repro.core.dol import DiffusionState, iid_distance
+from repro.fl.client import make_local_update
+from repro.fl.compression import compressed_bits, stc_compress
+
+Params = Any
+
+__all__ = ["FLConfig", "FLResult", "run_federated"]
+
+STRATEGIES = ("feddif", "fedavg", "fedswap", "stc", "tthf", "gossip",
+              "feddif_stc", "fedprox", "feddif_prox")
+
+
+@dataclasses.dataclass
+class FLConfig:
+    strategy: str = "feddif"
+    num_clients: int = 10
+    num_models: int = 10               # M (FedDif trains M ≤ N models)
+    rounds: int = 30                   # T communication rounds
+    local_epochs: int = 1
+    lr: float = 0.01
+    momentum: float = 0.9
+    batch_size: int = 16
+    epsilon: float = 0.04              # min tolerable IID distance
+    gamma_min: float = 1.0             # min tolerable QoS (bit/s/Hz)
+    metric: str = "w1_norm"
+    diffusion_ratio: float = 1.0       # fraction of PUEs allowed to diffuse
+    stc_sparsity: float = 0.01
+    prox_mu: float = 0.01              # FedProx proximal coefficient
+    tthf_cluster_size: int = 5
+    tthf_global_period: int = 4
+    bits_per_param: int = 32
+    seed: int = 0
+    max_diffusion_rounds: int | None = None
+    eval_every: int = 1
+    allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
+    underlay: bool = False           # Appendix C-F (D2D reuses CUE PRBs)
+
+
+@dataclasses.dataclass
+class FLResult:
+    accuracy: list[float]
+    loss: list[float]
+    ledger: ResourceLedger
+    diffusion_rounds: list[int]
+    iid_distance: list[float]
+    config: FLConfig
+    final_params: Params = None
+
+    def rounds_to_accuracy(self, target: float) -> int | None:
+        for i, a in enumerate(self.accuracy):
+            if a >= target:
+                return i + 1
+        return None
+
+
+def _uplink_gamma(channel: ChannelModel, pos: np.ndarray,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Spectral efficiency of each user's link to the BS at the origin."""
+    d = np.linalg.norm(pos, axis=-1)
+    gains = channel.sample_gains(np.maximum(d, 1.0), rng)
+    return spectral_efficiency(channel.snr(gains))
+
+
+def run_federated(init_fn: Callable, loss_fn: Callable,
+                  client_batches: Sequence[Callable[[], list[dict]]],
+                  dsi: np.ndarray, data_sizes: np.ndarray,
+                  eval_fn: Callable[[Params], tuple[float, float]],
+                  cfg: FLConfig) -> FLResult:
+    """Run one FL experiment.
+
+    Args:
+      init_fn: key -> params.
+      loss_fn: (params, batch) -> scalar.
+      client_batches: per client, a callable returning one local epoch of
+        batches.
+      dsi / data_sizes: from the Dirichlet partitioner.
+      eval_fn: params -> (accuracy, loss) on held-out data.
+      cfg: experiment configuration.
+    """
+    assert cfg.strategy in STRATEGIES, cfg.strategy
+    n, m = cfg.num_clients, cfg.num_models
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    topology = CellTopology(num_pues=n)
+    channel = ChannelModel()
+    auction = AuctionConfig(gamma_min=cfg.gamma_min, metric=cfg.metric,
+                            allow_retraining=cfg.allow_retraining)
+    planner = DiffusionPlanner(topology, channel, auction,
+                               epsilon=cfg.epsilon,
+                               max_rounds=cfg.max_diffusion_rounds,
+                               underlay=cfg.underlay)
+    if cfg.strategy in ("fedprox", "feddif_prox"):
+        # proximal local solver (anchor = the received model's weights)
+        from repro.fl.fedprox import make_prox_local_update
+        local_update = make_prox_local_update(loss_fn, cfg.prox_mu,
+                                              cfg.momentum)
+    else:
+        local_update = make_local_update(loss_fn, cfg.momentum)
+    ledger = ResourceLedger()
+
+    global_params = init_fn(key)
+    model_bits = agg.model_bits(global_params, cfg.bits_per_param)
+    auction.model_bits = model_bits
+
+    acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
+
+    # gossip / tthf keep per-client params persistently
+    persistent = ([copy.deepcopy(global_params) for _ in range(n)]
+                  if cfg.strategy in ("gossip", "tthf") else None)
+
+    for t in range(cfg.rounds):
+        pos = topology.sample_positions(rng, n)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, rng), 0.05)
+
+        if cfg.strategy in ("feddif", "feddif_stc", "feddif_prox"):
+            k_rounds, iid_now = _round_feddif(
+                global_params, local_update, client_batches, dsi, data_sizes,
+                planner, ledger, model_bits, pos, rng, cfg, up_gamma)
+            global_params = k_rounds.pop("agg")
+            dif_hist.append(k_rounds["rounds"])
+            iid_hist.append(iid_now)
+        elif cfg.strategy in ("fedavg", "fedprox"):
+            global_params = _round_fedavg(
+                global_params, local_update, client_batches, data_sizes,
+                ledger, model_bits, up_gamma, cfg)
+            dif_hist.append(0)
+            iid_hist.append(float(np.mean(iid_distance(
+                np.asarray(dsi), cfg.metric))))
+        elif cfg.strategy == "stc":
+            global_params = _round_stc(
+                global_params, local_update, client_batches, data_sizes,
+                ledger, up_gamma, cfg)
+            dif_hist.append(0)
+            iid_hist.append(float(np.mean(iid_distance(
+                np.asarray(dsi), cfg.metric))))
+        elif cfg.strategy == "fedswap":
+            global_params, k_sw = _round_fedswap(
+                global_params, local_update, client_batches, data_sizes,
+                ledger, model_bits, pos, rng, channel, cfg, up_gamma)
+            dif_hist.append(k_sw)
+            iid_hist.append(0.0)
+        elif cfg.strategy == "tthf":
+            global_params = _round_tthf(
+                persistent, local_update, client_batches, data_sizes,
+                ledger, model_bits, pos, rng, channel, cfg, up_gamma, t)
+            dif_hist.append(0)
+            iid_hist.append(0.0)
+        elif cfg.strategy == "gossip":
+            persistent = _round_gossip(
+                persistent, local_update, client_batches, data_sizes,
+                ledger, model_bits, pos, rng, channel, cfg)
+            global_params = agg.fedavg(persistent, list(data_sizes))
+            dif_hist.append(1)
+            iid_hist.append(0.0)
+
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            a, l = eval_fn(global_params)
+            acc_hist.append(float(a))
+            loss_hist.append(float(l))
+
+    return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
+                    diffusion_rounds=dif_hist, iid_distance=iid_hist,
+                    config=cfg, final_params=global_params)
+
+
+# ------------------------------------------------------------------ rounds
+
+def _round_feddif(global_params, local_update, client_batches, dsi,
+                  data_sizes, planner: DiffusionPlanner,
+                  ledger: ResourceLedger, model_bits, pos, rng, cfg,
+                  up_gamma):
+    n, m = cfg.num_clients, cfg.num_models
+    # BS clones the global model to M local models and broadcasts.
+    models = [copy.deepcopy(global_params) for _ in range(m)]
+    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
+    state = DiffusionState.init(m, n, dsi.shape[1])
+
+    # Initial training by the initial holders (Algorithm 2 lines 9–13).
+    for mi in range(m):
+        holder = int(state.holder[mi])
+        models[mi], _ = local_update(models[mi], client_batches[holder](),
+                                     cfg.lr)
+        state.record_training(mi, holder, dsi[holder],
+                              float(data_sizes[holder]))
+
+    # Diffusion rounds (plan + execute).
+    plan = planner.plan_communication_round(state, dsi, data_sizes, rng,
+                                            positions=pos)
+    for k in range(plan.num_rounds):
+        for hop in plan.hops_in_round(k):
+            bits = model_bits
+            if cfg.strategy == "feddif_stc":
+                # STC compresses the hop's DELTA against the round-start
+                # global model (which every PUE holds from the broadcast);
+                # the receiver reconstructs global + ternarized delta.
+                delta = jax.tree.map(lambda a, b: a - b,
+                                     models[hop.model], global_params)
+                cdelta = stc_compress(delta, cfg.stc_sparsity)
+                models[hop.model] = jax.tree.map(lambda g, d: g + d,
+                                                 global_params, cdelta)
+                bits = compressed_bits(delta, cfg.stc_sparsity)
+            ledger.charge_d2d(bits, max(hop.gamma, 0.05))
+            models[hop.model], _ = local_update(
+                models[hop.model], client_batches[hop.dst](), cfg.lr)
+
+    # Uplink + aggregation (Eq. 11), weighted by chain data size.
+    for mi in range(m):
+        holder = int(state.holder[mi])
+        ledger.charge_uplink(model_bits, float(up_gamma[holder]))
+    weights = [float(state.chain_size[mi]) for mi in range(m)]
+    out = agg.fedavg(models, weights)
+    return {"agg": out, "rounds": plan.num_rounds}, \
+        float(np.mean(plan.final_iid_distance))
+
+
+def _round_fedavg(global_params, local_update, client_batches, data_sizes,
+                  ledger, model_bits, up_gamma, cfg):
+    n = cfg.num_clients
+    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
+    locals_ = []
+    for i in range(n):
+        p, _ = local_update(copy.deepcopy(global_params),
+                            client_batches[i](), cfg.lr)
+        locals_.append(p)
+        ledger.charge_uplink(model_bits, float(up_gamma[i]))
+    return agg.fedavg(locals_, list(data_sizes))
+
+
+def _round_stc(global_params, local_update, client_batches, data_sizes,
+               ledger, up_gamma, cfg):
+    n = cfg.num_clients
+    full_bits = agg.model_bits(global_params, cfg.bits_per_param)
+    ledger.charge_downlink(full_bits, float(np.median(up_gamma)), n)
+    deltas = []
+    for i in range(n):
+        p, _ = local_update(copy.deepcopy(global_params),
+                            client_batches[i](), cfg.lr)
+        delta = jax.tree.map(lambda a, b: a - b, p, global_params)
+        cdelta = stc_compress(delta, cfg.stc_sparsity)
+        deltas.append(cdelta)
+        ledger.charge_uplink(compressed_bits(delta, cfg.stc_sparsity),
+                             float(up_gamma[i]))
+    mean_delta = agg.fedavg(deltas, list(data_sizes))
+    return jax.tree.map(lambda g, d: g + d, global_params, mean_delta)
+
+
+def _round_fedswap(global_params, local_update, client_batches, data_sizes,
+                   ledger, model_bits, pos, rng, channel, cfg, up_gamma):
+    """FedSwap [21]: every round, models do a random full swap across all
+    PUEs until each model visited every client (full diffusion)."""
+    n = cfg.num_clients
+    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
+    models = [copy.deepcopy(global_params) for _ in range(n)]
+    holder = np.arange(n)
+    dist = CellTopology(num_pues=n).pairwise_distances(pos)
+    visited = np.eye(n, dtype=bool)
+    for mi in range(n):
+        models[mi], _ = local_update(models[mi], client_batches[mi](),
+                                     cfg.lr)
+    swaps = 0
+    while not visited.all():
+        perm = rng.permutation(n)
+        gains = channel.sample_gains(dist, rng)
+        gamma = spectral_efficiency(channel.snr(gains))
+        for mi in range(n):
+            src, dst = int(holder[mi]), int(perm[mi])
+            if src == dst:
+                continue
+            ledger.charge_d2d(model_bits, max(float(gamma[src, dst]), 0.05))
+            holder[mi] = dst
+            if not visited[mi, dst]:
+                models[mi], _ = local_update(models[mi],
+                                             client_batches[dst](), cfg.lr)
+                visited[mi, dst] = True
+        swaps += 1
+        if swaps > 4 * n:
+            break
+    for mi in range(n):
+        ledger.charge_uplink(model_bits, float(up_gamma[int(holder[mi])]))
+    return agg.fedavg(models, list(data_sizes)), swaps
+
+
+def _round_tthf(params, local_update, client_batches, data_sizes,
+                ledger, model_bits, pos, rng, channel, cfg, up_gamma, t):
+    """TT-HF-like [22]: local updates + intra-cluster D2D averaging each
+    round; global aggregation only every ``tthf_global_period`` rounds.
+    ``params`` is the persistent per-client parameter list (mutated)."""
+    n = cfg.num_clients
+    cs = cfg.tthf_cluster_size
+    clusters = [list(range(i, min(i + cs, n))) for i in range(0, n, cs)]
+    dist = CellTopology(num_pues=n).pairwise_distances(pos)
+    gains = channel.sample_gains(dist, rng)
+    gamma = spectral_efficiency(channel.snr(gains))
+    for i in range(n):
+        params[i], _ = local_update(params[i], client_batches[i](), cfg.lr)
+    # intra-cluster consensus averaging (each member sends to a head)
+    for cl in clusters:
+        head = cl[0]
+        for i in cl[1:]:
+            ledger.charge_d2d(model_bits, max(float(gamma[i, head]), 0.05))
+        avg = agg.fedavg([params[i] for i in cl],
+                         [float(data_sizes[i]) for i in cl])
+        for i in cl:
+            params[i] = copy.deepcopy(avg)
+    if (t + 1) % cfg.tthf_global_period == 0:
+        for cl in clusters:
+            ledger.charge_uplink(model_bits, float(up_gamma[cl[0]]))
+        ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
+        g = agg.fedavg(params, list(data_sizes))
+        for i in range(n):
+            params[i] = copy.deepcopy(g)
+        return g
+    return agg.fedavg(params, list(data_sizes))
+
+
+def _round_gossip(gossip_params, local_update, client_batches, data_sizes,
+                  ledger, model_bits, pos, rng, channel, cfg):
+    """D-PSGD-style gossip: train locally, then average with one random
+    neighbor over D2D (fully decentralized — no BS)."""
+    n = cfg.num_clients
+    dist = CellTopology(num_pues=n).pairwise_distances(pos)
+    gains = channel.sample_gains(dist, rng)
+    gamma = spectral_efficiency(channel.snr(gains))
+    for i in range(n):
+        gossip_params[i], _ = local_update(gossip_params[i],
+                                           client_batches[i](), cfg.lr)
+    perm = rng.permutation(n)
+    for a in range(0, n - 1, 2):
+        i, j = int(perm[a]), int(perm[a + 1])
+        ledger.charge_d2d(model_bits, max(float(gamma[i, j]), 0.05))
+        ledger.charge_d2d(model_bits, max(float(gamma[j, i]), 0.05))
+        avg = agg.fedavg([gossip_params[i], gossip_params[j]],
+                         [float(data_sizes[i]), float(data_sizes[j])])
+        gossip_params[i] = copy.deepcopy(avg)
+        gossip_params[j] = copy.deepcopy(avg)
+    return gossip_params

@@ -1,0 +1,70 @@
+"""Public kernel ops: jit'd wrappers that dispatch Pallas on TPU and the
+pure-jnp oracle (ref.py) elsewhere — the dry-run path lowers the oracle
+because Pallas-TPU cannot compile on a CPU backend (DESIGN.md §2).
+
+``implementation`` ∈ {"auto", "pallas", "pallas_interpret", "xla"}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+from repro.kernels.stc_compress import stc_apply_pallas, stc_reduce_pallas
+
+__all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan"]
+
+
+def _resolve(implementation: str) -> str:
+    if implementation != "auto":
+        return implementation
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    implementation: str = "auto") -> jax.Array:
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale,
+                                  interpret=(impl == "pallas_interpret"))
+
+
+def stc_compress(x, sparsity: float = 0.01, *,
+                 implementation: str = "auto") -> jax.Array:
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.stc_compress_ref(x, sparsity)
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = max(1, int(n * sparsity))
+    # τ = k-th largest |x| (global sort: stays in XLA; see stc_compress.py)
+    thr = jnp.sort(jnp.abs(flat))[n - k]
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    ssum, cnt = stc_reduce_pallas(flat, thr, interpret=interpret)
+    mu = ssum / jnp.maximum(cnt, 1.0)
+    out = stc_apply_pallas(flat, thr, mu, interpret=interpret)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def ssm_scan(da, dbx, *, implementation: str = "auto") -> jax.Array:
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.ssm_scan_ref(da, dbx)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return ssm_scan_pallas(da, dbx, interpret=interpret)
+
+
+def ssd_scan(xh, a, bmat, cmat, *, implementation: str = "auto") -> jax.Array:
+    """Mamba-2 SSD chunk scan (zamba2)."""
+    from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ssd_scan_ref(xh, a, bmat, cmat)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return ssd_scan_pallas(xh, a, bmat, cmat, interpret=interpret)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against these functions.  They are also the XLA
+fallbacks used on non-TPU backends (the dry-run lowers these — Pallas-TPU
+cannot compile on a CPU host; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["flash_attention_ref", "stc_compress_ref", "ssm_scan_ref"]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Naive softmax attention.  q: (B, Sq, H, D); k/v: (B, Sk, H, D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = (1.0 / np.sqrt(d)) if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned positions
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)           # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def stc_compress_ref(x: jax.Array, sparsity: float) -> jax.Array:
+    """Sparse ternary compression (Sattler et al.): keep the top-k entries
+    by |magnitude|, replace them with sign(x)·mean(|top-k|)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = max(1, int(n * sparsity))
+    topv, topi = jax.lax.top_k(jnp.abs(flat), k)
+    mu = jnp.mean(topv)
+    out = jnp.zeros_like(flat).at[topi].set(jnp.sign(flat[topi]) * mu)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def ssm_scan_ref(da: jax.Array, dbx: jax.Array,
+                 h0: jax.Array | None = None) -> jax.Array:
+    """Diagonal linear recurrence h_t = da_t * h_{t-1} + dbx_t.
+
+    da/dbx: (B, S, D, N) fp32.  Returns all states (B, S, D, N).
+    """
+    b, s, d, n = da.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(h, x):
+        a, bx = x
+        h = a * h + bx
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+                          jnp.moveaxis(dbx, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(hs, 0, 1)

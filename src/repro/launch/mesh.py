@@ -1,0 +1,44 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run entry
+point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before*
+any jax import; everything else sees the real device count.
+
+Target hardware (constants used by §Roofline): TPU v5e,
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS",
+           "HBM_BW", "ICI_BW", "mesh_axes"]
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real host devices (CI / smoke tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,3 @@
+from repro.models.zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,185 @@
+"""Whisper-style encoder–decoder transformer backbone.
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs()`` supplies precomputed frame embeddings
+``(B, num_frames, d_model)`` (1500 frames for whisper-base's 30 s window).
+This module implements everything downstream: sinusoidal-position encoder
+with bidirectional attention, causal decoder with self- + cross-attention,
+GELU MLPs and pre-LayerNorm as in the original architecture
+[arXiv:2212.04356].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import (AttnSpec, attn_decode, attn_forward,
+                                    cross_attn_decode, init_attention,
+                                    init_kv_cache, precompute_cross_kv)
+
+Array = jax.Array
+Params = Any
+
+__all__ = ["enc_spec", "dec_spec", "init_encdec", "encode", "encdec_loss",
+           "init_encdec_cache", "encdec_decode_step"]
+
+
+def enc_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, use_rope=False,
+                    causal=False, norm_eps=cfg.norm_eps,
+                    compute_dtype=jnp.dtype(cfg.compute_dtype))
+
+
+def dec_spec(cfg: ModelConfig) -> AttnSpec:
+    return AttnSpec(d_model=cfg.d_model, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, use_rope=False,
+                    causal=True, norm_eps=cfg.norm_eps,
+                    compute_dtype=jnp.dtype(cfg.compute_dtype))
+
+
+def _init_mlp(key, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w1": L.init_dense(k1, d, d_ff), "w2": L.init_dense(k2, d_ff, d)}
+
+
+def _mlp(p: Params, x: Array, cd) -> Array:
+    return L.dense(p["w2"], jax.nn.gelu(L.dense(p["w1"], x, cd)), cd)
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_layernorm(cfg.d_model),
+            "attn": init_attention(k1, enc_spec(cfg)),
+            "ln2": L.init_layernorm(cfg.d_model),
+            "mlp": _init_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_layernorm(cfg.d_model),
+            "self_attn": init_attention(k1, dec_spec(cfg)),
+            "ln_x": L.init_layernorm(cfg.d_model),
+            "cross_attn": init_attention(k2, enc_spec(cfg)),
+            "ln2": L.init_layernorm(cfg.d_model),
+            "mlp": _init_mlp(k3, cfg.d_model, cfg.d_ff)}
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    ne = cfg.encoder_layers or cfg.num_layers
+    nd = cfg.num_layers
+    return {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(ks[1], ne)),
+        "enc_norm": L.init_layernorm(cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(ks[2], nd)),
+        "dec_norm": L.init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: Array, *,
+           remat: bool = True) -> Array:
+    """frames: (B, T_audio, D) stub conv-frontend output -> encoder states."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    spec = enc_spec(cfg)
+    x = frames.astype(cd) + L.sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(cd)
+
+    def body(h, p):
+        h = h + attn_forward(p["attn"], spec,
+                             L.layernorm(p["ln1"], h, cfg.norm_eps))
+        h = h + _mlp(p["mlp"], L.layernorm(p["ln2"], h, cfg.norm_eps), cd)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decode_hidden(params: Params, cfg: ModelConfig, tokens: Array,
+                   enc_out: Array, *, remat: bool = True) -> Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    sspec, xspec = dec_spec(cfg), enc_spec(cfg)
+    x = L.embed(params["embed"], tokens, cd)
+    x = x + L.sinusoidal_positions(tokens.shape[1],
+                                   cfg.d_model).astype(cd)
+
+    def body(h, p):
+        h = h + attn_forward(p["self_attn"], sspec,
+                             L.layernorm(p["ln1"], h, cfg.norm_eps))
+        h = h + attn_forward(p["cross_attn"], xspec,
+                             L.layernorm(p["ln_x"], h, cfg.norm_eps),
+                             context=enc_out)
+        h = h + _mlp(p["mlp"], L.layernorm(p["ln2"], h, cfg.norm_eps), cd)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    return L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+
+
+def encdec_loss(params: Params, cfg: ModelConfig, batch: dict, *,
+                remat: bool = True) -> Array:
+    """batch: frames (B,T,D), tokens (B,S), labels (B,S)."""
+    enc_out = encode(params, cfg, batch["frames"], remat=remat)
+    hidden = _decode_hidden(params, cfg, batch["tokens"], enc_out,
+                            remat=remat)
+    return L.chunked_cross_entropy(params["embed"], hidden, batch["labels"],
+                                   tie=True, mask=batch.get("mask"))
+
+
+# ------------------------------------------------------------------ decode
+
+def init_encdec_cache(params: Params, cfg: ModelConfig, frames: Array,
+                      batch: int, max_seq: int) -> Params:
+    """Runs the encoder once; returns self-attn KV rings + static cross KV."""
+    enc_out = encode(params, cfg, frames, remat=False)
+    sspec, xspec = dec_spec(cfg), enc_spec(cfg)
+    nd = cfg.num_layers
+
+    self_cache = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (nd,) + a.shape).copy(),
+        init_kv_cache(sspec, batch, max_seq))
+    cross_cache = jax.vmap(
+        lambda p: precompute_cross_kv(p["cross_attn"], xspec, enc_out))(
+            params["dec_layers"])
+    return {"self": self_cache, "cross": cross_cache}
+
+
+def encdec_decode_step(params: Params, cfg: ModelConfig, tokens: Array,
+                       cache: Params, pos: Array) -> tuple[Array, Params]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    sspec, xspec = dec_spec(cfg), enc_spec(cfg)
+    x = L.embed(params["embed"], tokens, cd)
+    pe = L.sinusoidal_positions(cache["self"]["k"].shape[2],
+                                cfg.d_model).astype(cd)
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                               (tokens.shape[0],))
+    x = x + jnp.take(pe, pos_vec, axis=0)[:, None, :]
+
+    def body(h, xs):
+        p, sc, xc = xs
+        y, sc2 = attn_decode(p["self_attn"], sspec,
+                             L.layernorm(p["ln1"], h, cfg.norm_eps), sc, pos)
+        h = h + y
+        h = h + cross_attn_decode(p["cross_attn"], xspec,
+                                  L.layernorm(p["ln_x"], h, cfg.norm_eps), xc)
+        h = h + _mlp(p["mlp"], L.layernorm(p["ln2"], h, cfg.norm_eps), cd)
+        return h, sc2
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec_layers"], cache["self"],
+                                cache["cross"]))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed_logits(params["embed"], x, cd)
+    return logits.astype(jnp.float32), {"self": new_self,
+                                        "cross": cache["cross"]}

@@ -1,0 +1,381 @@
+"""State-space blocks: Mamba-1 selective scan and Mamba-2 SSD (chunked).
+
+Both are sub-quadratic in sequence length.  Training/prefill runs a chunked
+scan: ``lax.scan`` over sequence chunks carrying the recurrent state, with a
+parallel ``associative_scan`` (Mamba-1) or the SSD quadratic-within-chunk
+form (Mamba-2) inside each chunk — this bounds the live state tensor to one
+chunk and is the natural TPU blocking (the Pallas ``ssm_scan`` kernel tiles
+the same way into VMEM).
+
+Decode is a single recurrence step on the carried state; the "cache" of an
+SSM layer is ``(conv_buffer, ssm_state)`` — O(1) in context length, which is
+why the long_500k shape is admissible for these families (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Any
+
+__all__ = ["Mamba1Spec", "init_mamba1", "mamba1_forward", "init_mamba1_cache",
+           "mamba1_decode", "Mamba2Spec", "init_mamba2", "mamba2_forward",
+           "init_mamba2_cache", "mamba2_decode"]
+
+
+# ===================================================================
+# Mamba-1 (falcon-mamba-7b): per-channel selective scan, diagonal A.
+# ===================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Mamba1Spec:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0
+    chunk: int = 128
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba1(key, spec: Mamba1Spec) -> Params:
+    ks = jax.random.split(key, 7)
+    d, di, n = spec.d_model, spec.d_inner, spec.d_state
+    r = spec.resolved_dt_rank
+    return {
+        "in_proj": L.init_dense(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (spec.d_conv, di), jnp.float32)
+                  * (1.0 / spec.d_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.init_dense(ks[2], di, r + 2 * n),
+        "dt_proj": {"w": jax.random.normal(ks[3], (r, di), jnp.float32)
+                         * (r ** -0.5),
+                    "b": jnp.log(jnp.expm1(
+                        jnp.exp(jax.random.uniform(
+                            ks[4], (di,), minval=jnp.log(1e-3),
+                            maxval=jnp.log(1e-1))))),},
+        # S4D-real init: A_log[c, n] = log(n+1)
+        "a_log": jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                  (di, n)).copy(),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_dense(ks[5], di, d),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None = None):
+    """Depthwise causal conv1d.  x: (B,S,C), w: (K,C).  Returns (y, new_state)
+    where state is the trailing (K-1) inputs for streaming decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # window sum: y[t] = sum_j w[j] * xp[t+j]
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j] for j in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y + b, new_state
+
+
+def _ssm_params(p: Params, spec: Mamba1Spec, x_conv: Array):
+    """Input-dependent (Δ, B, C) and continuous A for tokens x_conv (B,S,di)."""
+    r, n = spec.resolved_dt_rank, spec.d_state
+    proj = L.dense(p["x_proj"], x_conv, jnp.float32)
+    dt_low, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, p["dt_proj"]["w"]) \
+        + p["dt_proj"]["b"]
+    dt = jax.nn.softplus(dt)                                 # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                 # (di,N)
+    da = jnp.exp(dt[..., None] * a)                          # (B,S,di,N)
+    dbx = dt[..., None] * bmat[:, :, None, :] \
+        * x_conv.astype(jnp.float32)[..., None]              # (B,S,di,N)
+    return da, dbx, cmat
+
+
+def _chunked_linear_scan(da: Array, dbx: Array, h0: Array, chunk: int):
+    """h_t = da_t * h_{t-1} + dbx_t, returning all h_t.  Shapes (B,S,di,N)."""
+    b, s, di, n = da.shape
+    pad = (-s) % chunk
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = da.shape[1] // chunk
+    da_c = da.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        da_i, dbx_i = xs                                     # (B,chunk,di,N)
+        # fold carry into the first element
+        dbx_i = dbx_i.at[:, 0].add(da_i[:, 0] * h)
+        aa, hh = jax.lax.associative_scan(combine, (da_i, dbx_i), axis=1)
+        return hh[:, -1], hh
+
+    h_last, hs = jax.lax.scan(body, h0, (da_c, dbx_c))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, di, n)
+    return hs[:, :s], h_last
+
+
+def _chunked_scan_project(da: Array, dbx: Array, cmat: Array, h0: Array,
+                          chunk: int):
+    """Scan + fused C-projection: emits y = Σ_n h[...,n]·C[...,n] per chunk
+    so the (B,S,di,N) state tensor never round-trips HBM (§Perf P2) — only
+    the N-times-smaller (B,S,di) output leaves the scan body."""
+    b, s, di, n = da.shape
+    pad = (-s) % chunk
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = da.shape[1] // chunk
+    da_c = da.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    c_c = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        da_i, dbx_i, c_i = xs
+        dbx_i = dbx_i.at[:, 0].add(da_i[:, 0] * h)
+        _, hh = jax.lax.associative_scan(combine, (da_i, dbx_i), axis=1)
+        y_i = jnp.einsum("bldn,bln->bld", hh, c_i)
+        return hh[:, -1], y_i
+
+    h_last, ys = jax.lax.scan(body, h0, (da_c, dbx_c, c_c))
+    ys = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)
+    return ys[:, :s], h_last
+
+
+def mamba1_forward(p: Params, spec: Mamba1Spec, x: Array) -> Array:
+    """x: (B,S,D) -> (B,S,D)."""
+    cd = spec.compute_dtype
+    xz = L.dense(p["in_proj"], x, cd)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    x_conv, _ = _causal_conv(xin, p["conv_w"].astype(cd),
+                             p["conv_b"].astype(cd))
+    x_conv = L.silu(x_conv)
+    da, dbx, cmat = _ssm_params(p, spec, x_conv)
+    h0 = jnp.zeros((x.shape[0], spec.d_inner, spec.d_state), jnp.float32)
+    if L.perf_opt_enabled("ssm_fuse"):
+        y, _ = _chunked_scan_project(da, dbx, cmat, h0, spec.chunk)
+    else:
+        hs, _ = _chunked_linear_scan(da, dbx, h0, spec.chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cmat)            # (B,S,di)
+    y = y + p["d_skip"] * x_conv.astype(jnp.float32)
+    y = y.astype(cd) * L.silu(z)
+    return L.dense(p["out_proj"], y, cd)
+
+
+def init_mamba1_cache(spec: Mamba1Spec, batch: int) -> Params:
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner),
+                          jnp.float32),
+        "h": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+    }
+
+
+def mamba1_decode(p: Params, spec: Mamba1Spec, x: Array, cache: Params
+                  ) -> tuple[Array, Params]:
+    """One-token step. x: (B,1,D)."""
+    cd = spec.compute_dtype
+    xz = L.dense(p["in_proj"], x, cd)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(xin, p["conv_w"].astype(cd),
+                                      p["conv_b"].astype(cd), cache["conv"])
+    x_conv = L.silu(x_conv)
+    da, dbx, cmat = _ssm_params(p, spec, x_conv)
+    h = da[:, 0] * cache["h"] + dbx[:, 0]                    # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])
+    y = y + p["d_skip"] * x_conv[:, 0].astype(jnp.float32)
+    y = (y.astype(cd) * L.silu(z[:, 0]))[:, None, :]
+    out = L.dense(p["out_proj"], y, cd)
+    return out, {"conv": conv_state.astype(jnp.float32), "h": h}
+
+
+# ===================================================================
+# Mamba-2 / SSD (zamba2): scalar decay per head, chunked SSD algorithm.
+# ===================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, spec: Mamba2Spec) -> Params:
+    ks = jax.random.split(key, 6)
+    d, di, n, nh = spec.d_model, spec.d_inner, spec.d_state, spec.num_heads
+    # Projections are kept separate (z/x sharded over d_inner on the `model`
+    # mesh axis; B/C/dt small and replicated) — see distributed/sharding.py.
+    return {
+        "w_zx": L.init_dense(ks[0], d, 2 * di),
+        "w_bc": L.init_dense(ks[1], d, 2 * n),
+        "w_dt": L.init_dense(ks[2], d, nh),
+        "conv_x": {"w": jax.random.normal(ks[3], (spec.d_conv, di),
+                                          jnp.float32) * (1.0 / spec.d_conv),
+                   "b": jnp.zeros((di,), jnp.float32)},
+        "conv_bc": {"w": jax.random.normal(ks[4], (spec.d_conv, 2 * n),
+                                           jnp.float32) * (1.0 / spec.d_conv),
+                    "b": jnp.zeros((2 * n,), jnp.float32)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": L.init_rmsnorm(di),
+        "out_proj": L.init_dense(ks[5], di, d),
+    }
+
+
+def _ssd_chunk_scan(xh: Array, a: Array, bmat: Array, cmat: Array,
+                    h0: Array, chunk: int):
+    """Chunked SSD (Mamba-2) recurrence.
+
+    xh:   (B,S,H,P)   value stream (dt-scaled)
+    a:    (B,S,H)     per-step log decay (negative)
+    bmat: (B,S,N)     input projection (shared across heads)
+    cmat: (B,S,N)     output projection
+    h0:   (B,H,P,N)   initial state
+    Returns (y (B,S,H,P), h_last).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    xs = (xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4),
+          a.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3),
+          bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3),
+          cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3))
+
+    def body(hprev, xs_i):
+        x_i, a_i, b_i, c_i = xs_i          # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        acum = jnp.cumsum(a_i, axis=1)                       # (B,L,H)
+        # intra-chunk (quadratic within chunk): decay matrix L.  Mask BEFORE
+        # exp — masked rel is positive and can overflow, and inf·0 in the
+        # VJP of a post-exp where() poisons gradients with NaNs.
+        rel = acum[:, :, None, :] - acum[:, None, :, :]      # (B,Lq,Lk,H)
+        ltri = jnp.tril(jnp.ones((x_i.shape[1], x_i.shape[1]), bool))
+        dec = jnp.exp(jnp.where(ltri[None, :, :, None], rel, -1e30))
+        cb = jnp.einsum("bqn,bkn->bqk", c_i, b_i)            # (B,Lq,Lk)
+        w = cb[..., None] * dec                              # (B,Lq,Lk,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w, x_i)
+        # contribution of the carried state
+        y_state = jnp.einsum("bqn,bhpn,bqh->bqhp", c_i, hprev,
+                             jnp.exp(acum))
+        # state update: h_new = decay_total * h + sum_k decay_k b_k x_k
+        tot = jnp.exp(acum[:, -1])                           # (B,H)
+        decay_k = jnp.exp(acum[:, -1:, :] - acum)            # (B,L,H)
+        h_new = tot[:, :, None, None] * hprev + jnp.einsum(
+            "bkn,bkhp,bkh->bhpn", b_i, x_i, decay_k)
+        return h_new, y_intra + y_state
+
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, p)
+    return ys[:, :s], h_last
+
+
+def _mamba2_streams(p: Params, spec: Mamba2Spec, x: Array,
+                    conv_state: Params | None):
+    cd = spec.compute_dtype
+    di, n, nh = spec.d_inner, spec.d_state, spec.num_heads
+    zx = L.dense(p["w_zx"], x, cd)
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = L.dense(p["w_bc"], x, cd)
+    dt = L.dense(p["w_dt"], x, cd)
+    cs_x = conv_state["x"] if conv_state is not None else None
+    cs_bc = conv_state["bc"] if conv_state is not None else None
+    xin, new_conv_x = _causal_conv(xin, p["conv_x"]["w"].astype(cd),
+                                   p["conv_x"]["b"].astype(cd), cs_x)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc"]["w"].astype(cd),
+                                   p["conv_bc"]["b"].astype(cd), cs_bc)
+    xin = L.silu(xin)
+    bc = L.silu(bc)
+    new_conv = {"x": new_conv_x, "bc": new_conv_bc}
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    a_step = dt * a                                               # (B,S,H)
+    xh = xin.astype(jnp.float32).reshape(*xin.shape[:-1], nh, spec.head_dim)
+    xh = xh * dt[..., None]
+    return z, xh, a_step, bmat.astype(jnp.float32), \
+        cmat.astype(jnp.float32), new_conv
+
+
+def mamba2_forward(p: Params, spec: Mamba2Spec, x: Array) -> Array:
+    cd = spec.compute_dtype
+    b = x.shape[0]
+    z, xh, a_step, bmat, cmat, _ = _mamba2_streams(p, spec, x, None)
+    h0 = jnp.zeros((b, spec.num_heads, spec.head_dim, spec.d_state),
+                   jnp.float32)
+    y, _ = _ssd_chunk_scan(xh, a_step, bmat, cmat, h0, spec.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, x.shape[1], spec.d_inner).astype(cd)
+    y = L.rmsnorm(p["out_norm"], y * L.silu(z))
+    return L.dense(p["out_proj"], y, cd)
+
+
+def init_mamba2_cache(spec: Mamba2Spec, batch: int) -> Params:
+    return {
+        "conv": {"x": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner),
+                                jnp.float32),
+                 "bc": jnp.zeros((batch, spec.d_conv - 1, 2 * spec.d_state),
+                                 jnp.float32)},
+        "h": jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.d_state),
+                       jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, spec: Mamba2Spec, x: Array, cache: Params
+                  ) -> tuple[Array, Params]:
+    cd = spec.compute_dtype
+    b = x.shape[0]
+    z, xh, a_step, bmat, cmat, conv_state = _mamba2_streams(
+        p, spec, x, cache["conv"])
+    da = jnp.exp(a_step[:, 0])                                # (B,H)
+    h = da[:, :, None, None] * cache["h"] + jnp.einsum(
+        "bn,bhp->bhpn", bmat[:, 0], xh[:, 0])
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h)
+    y = y + p["d_skip"][None, :, None] * xh[:, 0]
+    y = y.reshape(b, 1, spec.d_inner).astype(cd)
+    y = L.rmsnorm(p["out_norm"], y * L.silu(z[:, :1]))
+    out = L.dense(p["out_proj"], y, cd)
+    new_conv = jax.tree.map(lambda a: a.astype(jnp.float32), conv_state)
+    return out, {"conv": new_conv, "h": h}

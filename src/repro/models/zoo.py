@@ -1,0 +1,107 @@
+"""Uniform model API over every architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions: ``init``, ``loss`` (train / prefill forward), ``init_cache`` /
+``decode_step`` (serving), and ``input_specs`` / ``cache_specs`` returning
+``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+Array = jax.Array
+Params = Any
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], Params]
+    loss: Callable[..., Array]                  # (params, batch) -> scalar
+    init_cache: Callable[..., Params]
+    decode_step: Callable[..., tuple[Array, Params]]
+    input_specs: Callable[[ShapeConfig], dict]
+    cache_specs: Callable[[ShapeConfig], Params]
+
+    def train_batch_specs(self, shape: ShapeConfig) -> dict:
+        return self.input_specs(shape)
+
+
+def _lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.frontend == "vision" and shape.mode != "decode":
+        specs["patch_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _lm_cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Params:
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def _encdec_cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Params:
+    b, s = shape.global_batch, shape.seq_len
+    spec_s = ed.dec_spec(cfg)
+    nd = cfg.encoder_layers or cfg.num_layers
+    kh, hd = spec_s.num_kv_heads, spec_s.head_dim
+    bf16 = jnp.bfloat16
+    return {
+        "self": {"k": jax.ShapeDtypeStruct((cfg.num_layers, b, s, kh, hd),
+                                           bf16),
+                 "v": jax.ShapeDtypeStruct((cfg.num_layers, b, s, kh, hd),
+                                           bf16)},
+        "cross": {"k": jax.ShapeDtypeStruct(
+                      (cfg.num_layers, b, cfg.num_frontend_tokens, kh, hd),
+                      bf16),
+                  "v": jax.ShapeDtypeStruct(
+                      (cfg.num_layers, b, cfg.num_frontend_tokens, kh, hd),
+                      bf16)},
+    }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ed.init_encdec, cfg=cfg),
+            loss=lambda params, batch, **kw: ed.encdec_loss(params, cfg,
+                                                            batch, **kw),
+            init_cache=lambda params, frames, batch, max_seq: (
+                ed.init_encdec_cache(params, cfg, frames, batch, max_seq)),
+            decode_step=lambda params, tokens, cache, pos: (
+                ed.encdec_decode_step(params, cfg, tokens, cache, pos)),
+            input_specs=functools.partial(_lm_input_specs, cfg),
+            cache_specs=functools.partial(_encdec_cache_specs, cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init=functools.partial(tf.init_lm, cfg=cfg),
+        loss=lambda params, batch, **kw: tf.lm_loss(params, cfg, batch, **kw),
+        init_cache=lambda params, batch, max_seq: tf.init_cache(cfg, batch,
+                                                                max_seq),
+        decode_step=lambda params, tokens, cache, pos: (
+            tf.decode_step(params, cfg, tokens, cache, pos)),
+        input_specs=functools.partial(_lm_input_specs, cfg),
+        cache_specs=functools.partial(_lm_cache_specs, cfg),
+    )

@@ -1,0 +1,2 @@
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.engine import Request, ServingEngine

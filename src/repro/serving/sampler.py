@@ -1,0 +1,38 @@
+"""Token samplers for the serving engine: greedy, temperature, top-k,
+nucleus (top-p) — pure functions over (key, logits)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplerConfig", "sample"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0      # 0 => greedy
+    top_k: int = 0                # 0 => disabled
+    top_p: float = 1.0            # 1 => disabled
+
+
+def sample(key: jax.Array, logits: jax.Array, cfg: SamplerConfig
+           ) -> jax.Array:
+    """logits: (B, V) -> token ids (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    if cfg.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

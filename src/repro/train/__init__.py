@@ -1,0 +1,8 @@
+from repro.train.optimizer import (Optimizer, sgd, adamw, apply_updates,
+                                   clip_by_global_norm, global_norm,
+                                   constant_lr, cosine_lr, warmup_cosine_lr)
+from repro.train.trainstep import (TrainState, init_train_state,
+                                   make_train_step, make_eval_step,
+                                   make_prefill_step, make_serve_step)
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step)

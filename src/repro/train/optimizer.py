@@ -1,0 +1,131 @@
+"""Optimizers and LR schedules (self-contained, no optax).
+
+The paper trains every local model with SGD + momentum 0.9, lr 0.01,
+batch 16 (Sec. VI-A) — ``sgd`` is therefore the FL default.  ``adamw`` is
+provided for LM-scale pretraining runs of the assigned architectures.
+
+An optimizer is an ``Optimizer(init, update)`` pair over pytrees:
+  state  = init(params)
+  updates, state = update(grads, state, params, lr)
+  params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+__all__ = ["Optimizer", "sgd", "adamw", "apply_updates", "global_norm",
+           "clip_by_global_norm", "constant_lr", "cosine_lr",
+           "warmup_cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(
+        p.dtype), params, updates)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    """SGD with (heavy-ball) momentum — the paper's local optimizer."""
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params, lr):
+        def one(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g
+            step = g + momentum * mu_new if nesterov else mu_new
+            return -lr * step, mu_new
+
+        flat_g = jax.tree.leaves(grads)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_p = jax.tree.leaves(params)
+        outs = [one(g, m, p) for g, m, p in zip(flat_g, flat_mu, flat_p)]
+        treedef = jax.tree.structure(grads)
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+        return {"m": z(), "v": z(), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            upd = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return upd, m_new, v_new
+
+        treedef = jax.tree.structure(grads)
+        outs = [one(g, m, v, p) for g, m, v, p in zip(
+            jax.tree.leaves(grads), jax.tree.leaves(state["m"]),
+            jax.tree.leaves(state["v"]), jax.tree.leaves(params))]
+        return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+                {"m": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+                 "v": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+                 "count": c})
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------- schedules
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return fn
+
+
+def warmup_cosine_lr(peak: float, warmup: int, total_steps: int,
+                     floor: float = 0.0):
+    cos = cosine_lr(peak, max(total_steps - warmup, 1), floor)
+    def fn(step):
+        w = peak * step / max(warmup, 1)
+        return jnp.where(step < warmup, w, cos(step - warmup))
+    return fn

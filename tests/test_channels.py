@@ -1,0 +1,68 @@
+"""Wireless channel model + resource ledger tests (Sec. III-D, Eq. 39)."""
+import numpy as np
+import pytest
+
+from repro.channels import (ChannelModel, ChannelParams, CellTopology,
+                            ResourceLedger, outage_probability,
+                            required_bandwidth, spectral_efficiency)
+
+
+def test_pathloss_monotone_in_distance():
+    ch = ChannelModel()
+    d = np.array([1.0, 10.0, 100.0, 250.0])
+    beta = ch.large_scale_db(d)
+    assert (np.diff(beta) < 0).all()
+
+
+def test_spectral_efficiency_shannon():
+    assert spectral_efficiency(np.array(1.0)) == pytest.approx(1.0)
+    assert spectral_efficiency(np.array(3.0)) == pytest.approx(2.0)
+    assert spectral_efficiency(np.array(0.0)) == pytest.approx(0.0)
+
+
+def test_required_bandwidth_eq15():
+    b = required_bandwidth(1e6, np.array([1.0, 2.0, 0.0]))
+    assert b[0] == pytest.approx(1e6)
+    assert b[1] == pytest.approx(5e5)
+    assert np.isinf(b[2])
+
+
+def test_outage_probability_eq39():
+    # higher mean SNR -> lower outage; gamma_min -> 0 => outage -> 0
+    p1 = outage_probability(1.0, 10.0)
+    p2 = outage_probability(1.0, 100.0)
+    assert 0 <= p2 < p1 < 1
+    assert outage_probability(0.0, 10.0) == pytest.approx(0.0)
+
+
+def test_rayleigh_outage_matches_monte_carlo():
+    rng = np.random.default_rng(0)
+    mean_snr, gmin = 20.0, 1.5
+    h2 = rng.exponential(1.0, 200_000)
+    emp = np.mean(np.log2(1 + mean_snr * h2) <= gmin)
+    ana = outage_probability(gmin, mean_snr)
+    assert emp == pytest.approx(ana, abs=5e-3)
+
+
+def test_ledger_accounting():
+    led = ResourceLedger()
+    sf = led.charge_d2d(model_bits=1.8e5, gamma=1.0)   # rate 180 kbit/s
+    assert sf == 1000 and led.transmitted_models == 1
+    led.charge_uplink(1.8e5, 2.0)
+    assert led.uplink_models == 1 and led.subframes == 1500
+    led2 = ResourceLedger()
+    led2.charge_downlink(1.8e5, 1.0, n_users=10)
+    merged = led.merge(led2)
+    assert merged.subframes == led.subframes + led2.subframes
+    with pytest.raises(ValueError):
+        led.charge_d2d(1e5, 0.0)
+
+
+def test_topology_positions_within_cell():
+    topo = CellTopology(radius_m=250.0)
+    rng = np.random.default_rng(0)
+    pos = topo.sample_positions(rng, 500)
+    assert (np.linalg.norm(pos, axis=1) <= 250.0 + 1e-9).all()
+    d = topo.pairwise_distances(pos)
+    assert d.shape == (500, 500)
+    assert (np.diag(d) == 1.0).all()

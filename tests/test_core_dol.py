@@ -1,0 +1,128 @@
+"""Unit + property tests for the FedDif core math (Sec. III-B, Lemmas 1–2)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dol as D
+
+
+def simplex(draw_c):
+    return st.lists(st.floats(0.01, 10.0), min_size=draw_c, max_size=draw_c) \
+        .map(lambda v: np.asarray(v, np.float32) / np.sum(v))
+
+
+@given(p=simplex(8))
+@settings(max_examples=50, deadline=None)
+def test_iid_distance_nonneg_and_zero_at_uniform(p):
+    d = float(D.iid_distance(jnp.asarray(p)))
+    assert d >= 0.0
+    u = D.uniform_dol(8)
+    assert float(D.iid_distance(u)) < 1e-6
+
+
+@given(p=simplex(10), q=simplex(10),
+       s1=st.floats(1.0, 1e4), s2=st.floats(1.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_dol_update_stays_on_simplex(p, q, s1, s2):
+    new, size = D.update_dol(jnp.asarray(p), s1, jnp.asarray(q), s2)
+    new = np.asarray(new)
+    assert abs(new.sum() - 1.0) < 1e-4
+    assert (new >= -1e-6).all()
+    assert float(size) == pytest.approx(s1 + s2)
+
+
+def test_dol_update_is_weighted_mixture():
+    p = np.array([1.0, 0.0, 0.0], np.float32)
+    q = np.array([0.0, 1.0, 0.0], np.float32)
+    new, _ = D.update_dol(jnp.asarray(p), 100.0, jnp.asarray(q), 300.0)
+    np.testing.assert_allclose(np.asarray(new), [0.25, 0.75, 0.0], atol=1e-6)
+
+
+def test_optimal_dsi_lemma1_drives_dol_to_uniform():
+    """Folding in Lemma-1's optimal DSI must land the DoL exactly on U."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        c = 6
+        dol = rng.dirichlet(np.ones(c)).astype(np.float32)
+        chain = float(rng.uniform(100, 1000))
+        # Corollary 1 feasibility bound
+        dmin = float(D.min_feasible_data_size(jnp.asarray(dol), chain))
+        di = dmin + float(rng.uniform(10, 100))
+        dstar = D.optimal_dsi(jnp.asarray(dol), chain, di)
+        dstar_np = np.asarray(dstar)
+        assert (dstar_np >= -1e-5).all()       # feasible (Corollary 1)
+        assert abs(dstar_np.sum() - 1.0) < 1e-4
+        new, _ = D.update_dol(jnp.asarray(dol), chain, dstar, di)
+        assert float(D.iid_distance(new)) < 1e-5
+
+
+def test_closed_form_iid_distance_lemma2():
+    """Eq. (30): distance computed from variations matches direct W1."""
+    rng = np.random.default_rng(1)
+    c = 5
+    dol = rng.dirichlet(np.ones(c)).astype(np.float32)
+    chain = 500.0
+    di = float(D.min_feasible_data_size(jnp.asarray(dol), chain)) + 50.0
+    # real-world DSI deviating from optimal by variation phi
+    dstar = np.asarray(D.optimal_dsi(jnp.asarray(dol), chain, di))
+    phi = rng.normal(0, 1, c).astype(np.float32)
+    phi -= phi.mean()  # keep DSI normalized
+    real = dstar + phi / di
+    new, total = D.update_dol(jnp.asarray(dol), chain, jnp.asarray(real), di)
+    direct = float(D.iid_distance(new))
+    closed = float(D.closed_form_iid_distance(jnp.asarray(phi), total))
+    assert direct == pytest.approx(closed, rel=1e-3, abs=1e-5)
+
+
+def test_iid_distance_converges_with_diffusion():
+    """Lemma 2 asymptotics: mixing many Dirichlet DSIs → distance → 0."""
+    rng = np.random.default_rng(2)
+    c = 10
+    dol = jnp.zeros((c,))
+    chain = 0.0
+    dist_hist = []
+    for k in range(200):
+        dsi = rng.dirichlet(np.ones(c) * 0.5).astype(np.float32)
+        dol, chain = D.update_dol(dol, chain, jnp.asarray(dsi), 100.0)
+        dist_hist.append(float(D.iid_distance(dol)))
+    # Lemma-2 rate: distance ~ O(1/k) — expect ~an order of magnitude drop
+    assert dist_hist[-1] < dist_hist[0]
+    assert dist_hist[-1] < 0.1
+    assert dist_hist[-1] < dist_hist[9] / 2
+
+
+@given(p=simplex(8))
+@settings(max_examples=30, deadline=None)
+def test_distance_metrics_agree_on_uniform(p):
+    for metric in ("w1_norm", "w1_true", "kld", "jsd"):
+        u = D.uniform_dol(8)
+        assert float(D.iid_distance(u, metric)) < 1e-5
+        assert float(D.iid_distance(jnp.asarray(p), metric)) >= -1e-7
+
+
+def test_entropy_maximized_at_uniform():
+    rng = np.random.default_rng(3)
+    u = D.uniform_dol(10)
+    hu = float(D.entropy(u))
+    for _ in range(20):
+        p = rng.dirichlet(np.ones(10)).astype(np.float32)
+        assert float(D.entropy(jnp.asarray(p))) <= hu + 1e-5
+
+
+def test_candidates_match_scalar_updates():
+    rng = np.random.default_rng(4)
+    m_, n_, c = 3, 4, 6
+    dol = rng.dirichlet(np.ones(c), m_).astype(np.float32)
+    chain = rng.uniform(100, 500, m_).astype(np.float32)
+    dsi = rng.dirichlet(np.ones(c), n_).astype(np.float32)
+    sizes = rng.uniform(50, 200, n_).astype(np.float32)
+    cand = np.asarray(D.iid_distance_candidates(
+        jnp.asarray(dol), jnp.asarray(chain), jnp.asarray(dsi),
+        jnp.asarray(sizes)))
+    for i in range(m_):
+        for j in range(n_):
+            new, _ = D.update_dol(jnp.asarray(dol[i]), chain[i],
+                                  jnp.asarray(dsi[j]), sizes[j])
+            assert cand[i, j] == pytest.approx(
+                float(D.iid_distance(new)), rel=1e-4, abs=1e-5)

@@ -1,0 +1,81 @@
+"""Diffusion planner invariants (Algorithm 2 control plane)."""
+import numpy as np
+import pytest
+
+from repro.core import (DiffusionPlanner, DiffusionState, iid_distance)
+from repro.core.auction import AuctionConfig
+
+
+def _plan(seed=0, n=10, m=10, c=10, alpha=0.5, epsilon=0.04):
+    rng = np.random.default_rng(seed)
+    dsi = rng.dirichlet(np.ones(c) * alpha, n).astype(np.float32)
+    sizes = rng.integers(200, 800, n).astype(np.float64)
+    state = DiffusionState.init(m, n, c)
+    for mi in range(m):
+        state.record_training(mi, mi % n, dsi[mi % n], sizes[mi % n])
+    planner = DiffusionPlanner(epsilon=epsilon)
+    plan = planner.plan_communication_round(state, dsi, sizes, rng)
+    return plan, state, n, m
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_no_retraining_constraint_18c(seed):
+    plan, state, n, m = _plan(seed)
+    visits: dict[int, set] = {mi: {mi % n} for mi in range(m)}
+    for h in plan.hops:
+        assert h.dst not in visits[h.model], "PUE trained same model twice"
+        visits[h.model].add(h.dst)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_one_model_per_pue_per_round_18d(seed):
+    plan, state, n, m = _plan(seed)
+    for k in range(plan.num_rounds):
+        dsts = [h.dst for h in plan.hops_in_round(k)]
+        assert len(dsts) == len(set(dsts))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_positive_decrements_18b(seed):
+    plan, *_ = _plan(seed)
+    for h in plan.hops:
+        assert h.decrement > 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_permutations_bijective(seed):
+    plan, state, n, m = _plan(seed)
+    for perm, mask in plan.as_permutations(n):
+        assert sorted(perm.tolist()) == list(range(n))
+        assert mask.sum() <= len(plan.hops)
+
+
+def test_diffusion_reduces_iid_distance():
+    plan, state, n, m = _plan(0)
+    start = None
+    # recompute initial distance from one-client chains
+    rng = np.random.default_rng(0)
+    dsi = rng.dirichlet(np.ones(10) * 0.5, n).astype(np.float32)
+    start = float(np.mean(iid_distance(np.asarray(dsi))))
+    assert float(np.mean(plan.final_iid_distance)) < start
+
+
+def test_epsilon_halting():
+    plan_tight, *_ = _plan(1, epsilon=0.3)
+    plan_loose, *_ = _plan(1, epsilon=0.01)
+    assert plan_tight.num_rounds <= plan_loose.num_rounds
+    assert (plan_tight.final_iid_distance <= 0.3 + 1e-6).all() or \
+        plan_tight.num_rounds > 0
+
+
+def test_max_rounds_cap():
+    planner = DiffusionPlanner(epsilon=0.0, max_rounds=2)
+    rng = np.random.default_rng(0)
+    n = c = 8
+    dsi = rng.dirichlet(np.ones(c) * 0.2, n).astype(np.float32)
+    sizes = rng.integers(100, 400, n).astype(np.float64)
+    state = DiffusionState.init(n, n, c)
+    for mi in range(n):
+        state.record_training(mi, mi, dsi[mi], sizes[mi])
+    plan = planner.plan_communication_round(state, dsi, sizes, rng)
+    assert plan.num_rounds <= 2

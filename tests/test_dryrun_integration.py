@@ -1,0 +1,38 @@
+"""End-to-end dry-run integration: one real 512-device subprocess lowering
+(the deliverable-e path), using the cheapest admissible pair."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+
+@pytest.mark.parametrize("mp", [False, True])
+def test_dryrun_subprocess_falcon_long(mp):
+    with tempfile.TemporaryDirectory() as out:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", "falcon_mamba_7b", "--shape", "long_500k",
+               "--out", out] + (["--multi-pod"] if mp else [])
+        env = dict(os.environ, PYTHONPATH="src")
+        r = subprocess.run(cmd, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), env=env, capture_output=True,
+            text=True, timeout=900)
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        suffix = "512" if mp else "256"
+        path = os.path.join(out,
+                            f"dryrun_falcon_mamba_7b_long_500k_{suffix}.json")
+        rec = json.load(open(path))
+        assert rec["status"] == "ok"
+        assert rec["chips"] == (512 if mp else 256)
+        assert rec["hlo_dot_flops_per_device"] > 0
+
+
+def test_dryrun_skip_rule():
+    """Full-attention archs must skip long_500k with the documented reason."""
+    import importlib
+    dr = importlib.import_module("repro.launch.dryrun")
+    r = dr.lower_one("smollm_360m", "long_500k", multi_pod=False)
+    assert r["status"] == "skipped"
+    assert "sub-quadratic" in r["reason"]

@@ -1,0 +1,18 @@
+"""SPMD FedDif runtime: planner control plane + jitted data plane converge."""
+import jax.numpy as jnp
+
+from repro.launch.fl_spmd import run_spmd_feddif
+
+
+def test_spmd_feddif_round_runs_and_improves():
+    logs = []
+    state, hist = run_spmd_feddif(arch="smollm_360m", clients=4, rounds=3,
+                                  seq_len=32, batch=2, seed=0,
+                                  log=lambda s: logs.append(s))
+    assert len(hist) == 3
+    assert hist[-1] < hist[0]            # mean client loss decreases
+    assert len(logs) == 3
+    # fleet state keeps the client axis
+    leaf = next(iter(jnp.asarray(x) for x in
+                     __import__("jax").tree.leaves(state.params)))
+    assert leaf.shape[0] == 4

@@ -1,0 +1,181 @@
+"""FL system integration: strategies run end-to-end; FedDif beats FedAvg
+under non-IID; STC compresses; ledger orderings match the paper's Table II
+qualitative structure.  Sizes are kept tiny for CI speed."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.data.partitioner import dirichlet_partition
+from repro.data.synthetic import gaussian_image_dataset, lm_corpus
+from repro.fl import (ExperimentSpec, FLConfig, run_experiment,
+                      build_task_model, compressed_bits, stc_compress)
+
+
+def _spec(strategy, rounds=4, alpha=0.3, task="fcn", **kw):
+    return ExperimentSpec(
+        task=task, alpha=alpha, num_samples=3000,
+        fl=FLConfig(strategy=strategy, rounds=rounds, num_clients=6,
+                    num_models=6, seed=0, **kw))
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "feddif", "fedswap", "stc",
+                                      "tthf", "gossip"])
+def test_strategy_runs(strategy):
+    res = run_experiment(_spec(strategy, rounds=2))
+    assert len(res.accuracy) == 2
+    assert all(0.0 <= a <= 1.0 for a in res.accuracy)
+    assert res.ledger.transmitted_models > 0 or strategy == "gossip"
+
+
+def test_feddif_beats_fedavg_under_noniid():
+    r_avg = run_experiment(_spec("fedavg", rounds=6, alpha=0.2))
+    r_dif = run_experiment(_spec("feddif", rounds=6, alpha=0.2))
+    assert max(r_dif.accuracy) > max(r_avg.accuracy)
+
+
+def test_feddif_diffuses_less_when_iid():
+    """Fig. 3: with IID data (α→∞) the BS performs (almost) no diffusion —
+    comparative claim vs the extreme non-IID setting."""
+    res_iid = run_experiment(_spec("feddif", rounds=2, alpha=1000.0,
+                                   epsilon=0.04))
+    res_non = run_experiment(_spec("feddif", rounds=2, alpha=0.1,
+                                   epsilon=0.04))
+    assert sum(res_iid.diffusion_rounds) < sum(res_non.diffusion_rounds)
+
+
+def test_feddif_iid_distance_decreases():
+    res = run_experiment(_spec("feddif", rounds=3, alpha=0.3))
+    assert res.iid_distance[-1] <= 0.25
+
+
+def test_stc_cheaper_than_fedavg_per_round():
+    r_avg = run_experiment(_spec("fedavg", rounds=2))
+    r_stc = run_experiment(_spec("stc", rounds=2))
+    assert r_stc.ledger.transmitted_bits < r_avg.ledger.transmitted_bits
+
+
+def test_fedswap_transmits_more_models_than_feddif():
+    """Table II ordering: FedSwap (full diffusion) ≥ FedDif transmissions."""
+    r_dif = run_experiment(_spec("feddif", rounds=3))
+    r_swp = run_experiment(_spec("fedswap", rounds=3))
+    assert r_swp.ledger.transmitted_models >= r_dif.ledger.transmitted_models
+
+
+def test_stc_compression_semantics():
+    tree = {"a": jnp.arange(-50.0, 50.0), "b": jnp.ones((10, 10))}
+    out = stc_compress(tree, sparsity=0.1)
+    for k in tree:
+        assert out[k].shape == tree[k].shape
+    bits = compressed_bits(tree, 0.1)
+    dense_bits = agg.model_bits(tree, 32)
+    assert bits < dense_bits
+
+
+def test_dirichlet_partition_properties():
+    ds = gaussian_image_dataset(2000, 10, 64, seed=0)
+    rng = np.random.default_rng(0)
+    part = dirichlet_partition(ds.y, 8, alpha=0.2, rng=rng)
+    assert part.num_clients == 8
+    assert all(len(ix) >= 8 for ix in part.indices)
+    # no duplicate assignment
+    allidx = np.concatenate(part.indices)
+    assert len(allidx) == len(np.unique(allidx))
+    # dsi rows are simplex points
+    np.testing.assert_allclose(part.dsi.sum(1), 1.0, atol=1e-5)
+    # low alpha => high skew: max class share well above uniform
+    assert part.dsi.max(1).mean() > 0.3
+
+
+def test_dirichlet_alpha_controls_skew():
+    ds = gaussian_image_dataset(4000, 10, 64, seed=0)
+    rng = np.random.default_rng(0)
+    skew_low = dirichlet_partition(ds.y, 8, 0.1, rng).dsi.max(1).mean()
+    skew_high = dirichlet_partition(ds.y, 8, 100.0, rng).dsi.max(1).mean()
+    assert skew_low > skew_high
+
+
+@pytest.mark.parametrize("task", ["logistic", "svm", "fcn", "lstm", "cnn"])
+def test_task_models_learn(task):
+    """Every Sec.-VI-A model family fits the synthetic data centrally."""
+    ds = gaussian_image_dataset(2000, 10, 64, seed=0)
+    model = build_task_model(task)
+    params = model.init(jax.random.PRNGKey(0))
+    import repro.train.optimizer as O
+    opt = O.sgd(0.9)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(p, s, bx, by):
+        loss, g = jax.value_and_grad(
+            lambda q: model.loss(q, {"x": bx, "y": by}))(p)
+        u, s = opt.update(g, s, p, 0.02)
+        return O.apply_updates(p, u), s, loss
+
+    rng = np.random.default_rng(0)
+    acc0 = float(model.accuracy(params, ds.x, ds.y))
+    for _ in range(100):
+        idx = rng.integers(0, len(ds.y), 64)
+        params, st, _ = step(params, st, ds.x[idx], ds.y[idx])
+    acc1 = float(model.accuracy(params, ds.x, ds.y))
+    assert acc1 > acc0 + 0.15, f"{task}: {acc0} -> {acc1}"
+
+
+def test_divergence_bound_prop1():
+    """Prop. 1 numeric sanity: bound grows with K and shrinks as the
+    probability distance shrinks."""
+    b1 = agg.divergence_bound(0.0, np.array([1.0]), 0.01, 5.0,
+                              np.array([1.0]), k=5)
+    b2 = agg.divergence_bound(0.0, np.array([1.0]), 0.01, 5.0,
+                              np.array([1.0]), k=10)
+    b3 = agg.divergence_bound(0.0, np.array([1.0]), 0.01, 5.0,
+                              np.array([0.1]), k=10)
+    assert b2 > b1 > 0 and b3 < b2
+
+
+def test_appendix_retrainable_runs():
+    """Appendix C-D: dropping constraint 18c still runs end-to-end (the
+    paper's point — re-training *eventually* hurts via overfitting/ping-pong
+    — needs long horizons; here we check mechanics: the planner actually
+    schedules repeat visits and stays bounded by max_diffusion_rounds)."""
+    retr = run_experiment(_spec("feddif", rounds=3, alpha=0.3,
+                                allow_retraining=True,
+                                max_diffusion_rounds=10))
+    assert all(r <= 10 for r in retr.diffusion_rounds)
+    assert 0.0 <= max(retr.accuracy) <= 1.0
+    assert retr.ledger.transmitted_models > 0
+
+
+def test_appendix_underlay_costs_more_per_hop():
+    """Appendix C-F: CUE interference lowers spectral efficiency, so each
+    scheduled D2D hop costs more sub-frames (and fewer links pass the QoS
+    filter, so fewer hops get scheduled overall)."""
+    over = run_experiment(_spec("feddif", rounds=2, alpha=0.5))
+    under = run_experiment(_spec("feddif", rounds=2, alpha=0.5,
+                                 underlay=True))
+    per_hop_over = over.ledger.subframes / max(
+        over.ledger.transmitted_models, 1)
+    per_hop_under = under.ledger.subframes / max(
+        under.ledger.transmitted_models, 1)
+    assert per_hop_under >= per_hop_over
+    assert under.ledger.transmitted_models <= over.ledger.transmitted_models
+
+
+def test_metric_variants_still_learn():
+    for metric in ("kld", "jsd", "w1_true"):
+        r = run_experiment(_spec("feddif", rounds=3, alpha=0.5,
+                                 metric=metric))
+        assert max(r.accuracy) > 0.25
+
+
+def test_fedprox_strategies_run_and_track_fedavg():
+    """FedProx (weight-regularization family, Sec. II-1) runs standalone and
+    composed with FedDif; with small μ it tracks the unregularized runs."""
+    base = run_experiment(_spec("fedavg", rounds=2))
+    prox = run_experiment(_spec("fedprox", rounds=2))
+    assert abs(max(prox.accuracy) - max(base.accuracy)) < 0.1
+    dif = run_experiment(_spec("feddif_prox", rounds=2))
+    assert max(dif.accuracy) >= max(prox.accuracy) - 0.05
