@@ -6,6 +6,13 @@ Emits ``name,value,derived`` CSV lines per benchmark plus a summary.  Quick
 mode (default) shrinks rounds/clients so the whole suite runs on a laptop
 CPU in minutes; ``--full`` approaches the paper's settings.
 
+The figure/table sweeps (fig3–fig6, table2) are driven by the declarative
+sweep registry in ``repro.experiments`` — the same grids the
+``python -m repro.launch.sweep`` CLI runs — so sweep definitions live in one
+place; this file only adds presentation (CSV lines, rounds-to-target).
+Each registry-driven bench also writes its ``BENCH_feddif_<sweep>.json``
+artifact under ``benchmarks/results/``.
+
 Paper artifacts covered:
   fig2_convergence      IID-distance & diffusion-efficiency convergence
                         (analytical Eq. 30 vs experimental)
@@ -60,53 +67,37 @@ def fig2_convergence(full: bool):
     return rows
 
 
+def _run_registry_sweep(bench_name: str, sweep_name: str, full: bool):
+    """Drive one registry sweep; print per-cell CSV lines; write artifact."""
+    from repro.experiments import run_sweep
+    art = run_sweep(sweep_name, smoke=not full, seeds=(0,),
+                    out_dir="benchmarks/results")
+    for c in art["cells"]:
+        curve = np.mean(np.asarray(c["accuracy"]), axis=0)
+        print(f"{bench_name},{c['label']},engine={c['engine']},"
+              f"acc={float(np.max(curve)):.4f},"
+              f"dif_rounds={np.mean(c['diffusion_rounds']):.1f},"
+              f"subframes={c['comm']['subframes']},"
+              f"models={c['comm']['transmitted_models']},"
+              f"bandwidth_hz_s={c['comm']['pusch_bandwidth_hz_s']:.3e},"
+              f"sec={c['wall_clock_s']:.0f}", flush=True)
+    return art
+
+
 def fig3_alpha_sweep(full: bool):
-    alphas = [0.1, 0.2, 0.5, 1.0, 100.0] if full else [0.2, 1.0, 100.0]
-    rounds = 20 if full else 6
-    for a in alphas:
-        t0 = time.time()
-        r_avg = _fl("fedavg", alpha=a, rounds=rounds)
-        r_dif = _fl("feddif", alpha=a, rounds=rounds)
-        print(f"fig3_alpha_sweep,alpha={a},"
-              f"fedavg_acc={max(r_avg.accuracy):.4f},"
-              f"feddif_acc={max(r_dif.accuracy):.4f},"
-              f"dif_rounds={np.mean(r_dif.diffusion_rounds):.1f},"
-              f"subframes={r_dif.ledger.subframes},"
-              f"sec={time.time()-t0:.0f}", flush=True)
+    _run_registry_sweep("fig3_alpha_sweep", "fig3_alpha", full)
 
 
 def fig4_epsilon_sweep(full: bool):
-    eps = [0.0, 0.02, 0.04, 0.1, 0.2] if full else [0.0, 0.04, 0.2]
-    rounds = 15 if full else 5
-    for e in eps:
-        r = _fl("feddif", alpha=1.0, rounds=rounds, epsilon=e)
-        print(f"fig4_epsilon_sweep,epsilon={e},acc={max(r.accuracy):.4f},"
-              f"dif_rounds={np.mean(r.diffusion_rounds):.1f},"
-              f"subframes={r.ledger.subframes},"
-              f"models={r.ledger.transmitted_models}", flush=True)
+    _run_registry_sweep("fig4_epsilon_sweep", "fig4_epsilon", full)
 
 
 def fig5_qos_sweep(full: bool):
-    gammas = [0.5, 1.0, 2.0, 4.0] if full else [1.0, 4.0]
-    rounds = 15 if full else 5
-    for g in gammas:
-        r = _fl("feddif", alpha=1.0, rounds=rounds, gamma_min=g)
-        print(f"fig5_qos_sweep,gamma_min={g},acc={max(r.accuracy):.4f},"
-              f"dif_rounds={np.mean(r.diffusion_rounds):.1f},"
-              f"subframes={r.ledger.subframes}", flush=True)
+    _run_registry_sweep("fig5_qos_sweep", "fig5_gamma_min", full)
 
 
 def fig6_tasks(full: bool):
-    tasks = ["logistic", "svm", "fcn", "lstm", "cnn"] if full \
-        else ["logistic", "fcn"]
-    rounds = 15 if full else 5
-    for t in tasks:
-        r_avg = _fl("fedavg", task=t, rounds=rounds, alpha=1.0)
-        r_dif = _fl("feddif", task=t, rounds=rounds, alpha=1.0)
-        print(f"fig6_tasks,task={t},fedavg_acc={max(r_avg.accuracy):.4f},"
-              f"feddif_acc={max(r_dif.accuracy):.4f},"
-              f"fedavg_subframes={r_avg.ledger.subframes},"
-              f"feddif_subframes={r_dif.ledger.subframes}", flush=True)
+    _run_registry_sweep("fig6_tasks", "fig6_tasks", full)
 
 
 def table1_accuracy(full: bool):
@@ -120,20 +111,26 @@ def table1_accuracy(full: bool):
 
 def table2_comm_eff(full: bool):
     """Sub-frames / transmitted models until target accuracy (the paper's
-    80 % CNN target, rescaled to this synthetic task)."""
-    rounds = 30 if full else 8
-    base = _fl("fedavg", alpha=1.0, rounds=rounds)
-    target = max(base.accuracy)  # baseline peak = target (Sec. VI-A)
+    80 % CNN target, rescaled to this synthetic task).  The grid comes from
+    the ``table2_strategies`` registry entry (incl. d2d_random_walk)."""
+    art = _run_registry_sweep("table2_comm_eff", "table2_strategies", full)
+    cells = {c["strategy"]: c for c in art["cells"]}
+    base = cells.get("fedavg")
+    if base is None:
+        return
+    base_curve = np.mean(np.asarray(base["accuracy"]), axis=0)
+    target = float(np.max(base_curve))   # baseline peak = target (Sec. VI-A)
     print(f"table2_comm_eff,target_acc={target:.4f},source=fedavg_peak")
-    for strat in ["fedavg", "stc", "fedswap", "feddif"]:
-        r = _fl(strat, alpha=1.0, rounds=rounds)
-        hit = r.rounds_to_accuracy(target)
-        frac = (hit / rounds) if hit else 1.0   # ledger is cumulative
+    for strat, c in cells.items():
+        curve = np.mean(np.asarray(c["accuracy"]), axis=0)
+        hit = next((i + 1 for i, a in enumerate(curve) if a >= target), None)
+        frac = (hit / len(curve)) if hit else 1.0   # ledger is cumulative
+        comm = c["comm"]
         print(f"table2_comm_eff,strategy={strat},"
               f"rounds_to_target={hit if hit else 'n/a'},"
-              f"subframes={int(r.ledger.subframes*frac)},"
-              f"models={int(r.ledger.transmitted_models*frac)},"
-              f"bits={r.ledger.transmitted_bits*frac:.3e}", flush=True)
+              f"subframes={int(comm['subframes']*frac)},"
+              f"models={int(comm['transmitted_models']*frac)},"
+              f"bits={comm['transmitted_bits']*frac:.3e}", flush=True)
 
 
 def kernels_microbench(full: bool):

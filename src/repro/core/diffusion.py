@@ -14,6 +14,8 @@ PUCCH control signalling and PUSCH model transmission.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 
 import numpy as np
 
@@ -23,7 +25,8 @@ from repro.channels.topology import CellTopology
 from repro.core import dol as dol_lib
 from repro.core.auction import AuctionConfig, AuctionResult, run_auction
 
-__all__ = ["DiffusionHop", "DiffusionPlan", "DiffusionPlanner"]
+__all__ = ["DiffusionHop", "DiffusionPlan", "DiffusionPlanner", "PlanCache",
+           "plan_cache_key"]
 
 
 @dataclasses.dataclass
@@ -102,6 +105,67 @@ class DiffusionPlan:
         return out
 
 
+def plan_cache_key(topology_seed: int, round_index: int, dsi: np.ndarray,
+                   data_sizes: np.ndarray, epsilon: float, gamma_min: float,
+                   metric: str, extra: tuple = ()) -> tuple:
+    """Cache key for one communication round's :class:`DiffusionPlan`.
+
+    A plan is a pure function of the control-plane inputs: the topology /
+    channel draw (derived from ``(topology_seed, round_index)``), the client
+    DSIs and data sizes (fixed by the data seed), and the planner knobs
+    (ε, γ_min, metric, …).  It is *independent of the model-init seed*, which
+    is what makes multi-seed replication cacheable: the orchestrator replans
+    once per sweep cell and replays the plan for every replicate seed.
+    """
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(dsi, np.float32).tobytes())
+    h.update(np.ascontiguousarray(data_sizes, np.float64).tobytes())
+    return (int(topology_seed), int(round_index), float(epsilon),
+            float(gamma_min), str(metric), h.hexdigest(), tuple(extra))
+
+
+class PlanCache:
+    """LRU memo of ``(DiffusionPlan, post-plan DiffusionState)`` snapshots.
+
+    ``DiffusionPlanner.plan_communication_round`` consults it when given a
+    ``cache_key``: on a hit the stored plan is returned and the caller's
+    mutable :class:`~repro.core.dol.DiffusionState` is fast-forwarded to the
+    stored post-plan snapshot — the auction / bidding loop (the expensive
+    host-side control plane) is skipped entirely.  Keys come from
+    :func:`plan_cache_key`; see there for what makes two rounds equivalent.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._store: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def lookup(self, key: tuple):
+        """Return ``(plan, post_state)`` or ``None``; counts hits/misses."""
+        entry = self._store.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def store(self, key: tuple, plan: "DiffusionPlan",
+              post_state: dol_lib.DiffusionState) -> None:
+        self._store[key] = (plan, post_state.snapshot())
+        self._store.move_to_end(key)
+        while len(self._store) > self.max_entries:
+            self._store.popitem(last=False)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._store)}
+
+
 class DiffusionPlanner:
     """Plans all diffusion rounds of one communication round."""
 
@@ -121,8 +185,22 @@ class DiffusionPlanner:
     def plan_communication_round(
             self, state: dol_lib.DiffusionState, dsi: np.ndarray,
             data_sizes: np.ndarray, rng: np.random.Generator,
-            positions: np.ndarray | None = None) -> DiffusionPlan:
-        """Runs auctions until halting; mutates ``state`` with visited sets."""
+            positions: np.ndarray | None = None,
+            cache: PlanCache | None = None,
+            cache_key: tuple | None = None) -> DiffusionPlan:
+        """Runs auctions until halting; mutates ``state`` with visited sets.
+
+        When ``cache``/``cache_key`` are given (see :func:`plan_cache_key`),
+        a hit skips the whole auction loop: the cached plan is returned and
+        ``state`` is fast-forwarded to the cached post-plan snapshot.  The
+        caller is responsible for a key that captures every plan input.
+        """
+        if cache is not None and cache_key is not None:
+            entry = cache.lookup(cache_key)
+            if entry is not None:
+                plan, post_state = entry
+                state.restore(post_state)
+                return plan
         n = dsi.shape[0]
         if positions is None:
             positions = self.topology.sample_positions(rng, n)
@@ -170,7 +248,10 @@ class DiffusionPlanner:
                 state.record_training(m, i, dsi[i], float(data_sizes[i]))
             eff_hist.append(result.efficiency)
         state.round_index += k
-        return DiffusionPlan(hops=hops, num_rounds=k,
+        plan = DiffusionPlan(hops=hops, num_rounds=k,
                              final_iid_distance=state.iid_distances(
                                  self.auction.metric),
                              efficiency_per_round=eff_hist)
+        if cache is not None and cache_key is not None:
+            cache.store(cache_key, plan, state)
+        return plan

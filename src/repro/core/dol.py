@@ -230,3 +230,19 @@ class DiffusionState:
 
     def iid_distances(self, metric: str = "w1_norm") -> np.ndarray:
         return np.asarray(iid_distance(jnp.asarray(self.dol), metric))
+
+    def snapshot(self) -> "DiffusionState":
+        """Deep copy — used by the plan cache to store post-plan state."""
+        return DiffusionState(dol=self.dol.copy(),
+                              chain_size=self.chain_size.copy(),
+                              visited=self.visited.copy(),
+                              holder=self.holder.copy(),
+                              round_index=self.round_index)
+
+    def restore(self, other: "DiffusionState") -> None:
+        """Overwrite this state in place from a snapshot (cache replay)."""
+        self.dol = other.dol.copy()
+        self.chain_size = other.chain_size.copy()
+        self.visited = other.visited.copy()
+        self.holder = other.holder.copy()
+        self.round_index = other.round_index

@@ -14,6 +14,23 @@ or ``data`` on-pod for paper-scale fleets (M ≈ 10 small models).
   lowered to an all-reduce
 * selective training (auction winners only) = `train_mask` select between
   updated and carried state — FedDif's partial participation.
+
+Relation to the strategy seam
+-----------------------------
+This module is a *data plane*, deliberately strategy-agnostic: it executes
+whatever per-round ``(src_of_dst, train_mask, weights)`` schedule it is
+handed and never consults the auction, the DoL state, or the wireless
+ledger.  The *control plane* — ``repro.core.diffusion.DiffusionPlanner``
+(host) — decides which strategy's schedule those arrays encode:
+``DiffusionPlan.as_permutations`` completes FedDif's partial auction matching
+into the bijection consumed here; an all-``True`` mask with an identity
+permutation is FedAvg; a full random permutation is FedSwap.  New
+host-loop strategies (see ``repro.fl.server``'s ``_round_*`` seam) map onto
+this plane by expressing their round as such per-round permutations —
+nothing in this file needs to change.  The same split is what the sweep
+orchestrator's plan cache exploits: plans are pure host-side schedules, so
+they can be replayed across replicate seeds while this data plane does all
+seed-dependent work.
 """
 from __future__ import annotations
 

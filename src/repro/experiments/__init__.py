@@ -1,0 +1,34 @@
+"""Paper-figure sweep orchestration.
+
+Public API:
+
+* :mod:`repro.experiments.registry` — the declarative sweep registry
+  (``REGISTRY``, :class:`SweepDef`, :class:`SweepCell`,
+  :func:`expand_sweep`): one entry per paper figure/table.
+* :mod:`repro.experiments.orchestrator` — :func:`run_sweep` /
+  :func:`run_cell`: expand a registry entry, run it with multi-seed
+  replication and a shared diffusion-plan cache, emit a
+  ``BENCH_feddif_<sweep>.json`` artifact.
+* :mod:`repro.experiments.replicate` — the replication engines
+  (seed-vmapped data plane vs process-level loop).
+* :mod:`repro.experiments.artifacts` — artifact schema and writer.
+
+CLI: ``PYTHONPATH=src python -m repro.launch.sweep --sweep fig3_alpha --smoke``.
+"""
+from repro.experiments.artifacts import (bench_path, build_artifact,
+                                         write_artifact)
+from repro.experiments.orchestrator import run_cell, run_sweep
+from repro.experiments.registry import (REGISTRY, SweepCell, SweepDef,
+                                        expand_sweep, get_sweep, register,
+                                        sweep_names)
+from repro.experiments.replicate import (SEED_VMAP_STRATEGIES,
+                                         run_replicates_loop,
+                                         run_replicates_vmapped)
+
+__all__ = [
+    "REGISTRY", "SweepCell", "SweepDef", "expand_sweep", "get_sweep",
+    "register", "sweep_names",
+    "run_cell", "run_sweep",
+    "SEED_VMAP_STRATEGIES", "run_replicates_loop", "run_replicates_vmapped",
+    "bench_path", "build_artifact", "write_artifact",
+]

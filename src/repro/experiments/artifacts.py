@@ -1,0 +1,76 @@
+"""Machine-readable sweep artifacts: ``BENCH_feddif_<sweep>.json``.
+
+One artifact per sweep run, containing per-cell accuracy curves (per seed),
+the communication ledger (consumed sub-frames, transmitted models/bits, and
+the cumulative PUSCH bandwidth of Eq. 15 in Hz·s), wall-clock, and
+plan-cache statistics.  The schema is versioned so downstream trend tooling
+can evolve without guessing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+import numpy as np
+
+__all__ = ["SCHEMA_VERSION", "bench_path", "build_artifact",
+           "write_artifact", "summarize_curves"]
+
+SCHEMA_VERSION = 1
+
+
+def bench_path(sweep: str, out_dir: str = ".") -> str:
+    return os.path.join(out_dir, f"BENCH_feddif_{sweep}.json")
+
+
+def summarize_curves(curves: list[list[float]]) -> dict:
+    """Per-seed curves -> mean/std of the peak and of the final value."""
+    peaks = [max(c) for c in curves if c]
+    finals = [c[-1] for c in curves if c]
+    return {
+        "peak_mean": float(np.mean(peaks)) if peaks else None,
+        "peak_std": float(np.std(peaks)) if peaks else None,
+        "final_mean": float(np.mean(finals)) if finals else None,
+        "final_std": float(np.std(finals)) if finals else None,
+        "per_seed_peak": [float(p) for p in peaks],
+    }
+
+
+def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
+                   seeds: list[int], cells: list[dict],
+                   plan_cache_stats: dict | None = None,
+                   wall_clock_s: float | None = None) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "sweep": sweep_name,
+        "figure": figure,
+        "axis": axis,
+        "mode": "smoke" if smoke else "full",
+        "seeds": [int(s) for s in seeds],
+        "created_unix": time.time(),
+        "wall_clock_s": wall_clock_s,
+        "plan_cache": plan_cache_stats or {},
+        "cells": cells,
+    }
+
+
+def write_artifact(artifact: dict, out_dir: str = ".") -> str:
+    """Write ``BENCH_feddif_<sweep>.json``; returns the path."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = bench_path(artifact["sweep"], out_dir)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=False,
+                  default=_json_default)
+    return path
+
+
+def _json_default(obj: Any):
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"not JSON serializable: {type(obj)}")

@@ -1,0 +1,136 @@
+"""Sweep orchestrator: registry entry -> grid -> replicated runs -> artifact.
+
+``run_sweep`` is the one-command reproduction path for a paper figure::
+
+    from repro.experiments import run_sweep
+    artifact = run_sweep("fig3_alpha", smoke=True, seeds=(0, 1, 2))
+
+For every cell of the sweep's grid it
+
+1. stamps a shared ``topology_seed`` so the wireless control plane is
+   independent of the replicate seed,
+2. runs the cell at every seed — vmapped over the seed axis on the data
+   plane where the strategy allows (:data:`SEED_VMAP_STRATEGIES`),
+   process-level loop otherwise,
+3. shares one :class:`~repro.core.diffusion.PlanCache` across the whole
+   sweep, so FedDif's host-side auction loop runs once per distinct
+   (topology seed, round, partition, ε, γ_min) and is *replayed* for every
+   other replicate, and
+4. folds the per-seed accuracy/loss curves, Eq.-15 cumulative PUSCH
+   bandwidth, sub-frame ledger and wall-clock into one JSON cell record.
+
+The CLI wrapper lives in ``repro.launch.sweep``; ``benchmarks/run.py``
+drives the same function, so sweep definitions exist in exactly one place
+(:mod:`repro.experiments.registry`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.core.diffusion import PlanCache
+from repro.experiments import artifacts
+from repro.experiments.registry import SweepCell, expand_sweep, get_sweep
+from repro.experiments.replicate import (SEED_VMAP_STRATEGIES,
+                                         run_replicates_loop,
+                                         run_replicates_vmapped)
+
+__all__ = ["run_cell", "run_sweep"]
+
+
+def _pick_engine(cell: SweepCell, engine: str) -> str:
+    if engine == "auto":
+        return ("seed_vmap" if cell.strategy in SEED_VMAP_STRATEGIES
+                else "loop")
+    return engine
+
+
+def run_cell(cell: SweepCell, seeds: Sequence[int],
+             plan_cache: PlanCache | None = None,
+             engine: str = "auto") -> dict:
+    """Run one sweep cell at every replicate seed; returns the JSON record.
+
+    ``engine``: ``"auto"`` (vmap the seed axis when the strategy allows),
+    ``"seed_vmap"``, or ``"loop"``.
+    """
+    if not len(seeds):
+        raise ValueError("run_cell needs at least one replicate seed")
+    chosen = _pick_engine(cell, engine)
+    t0 = time.time()
+    if chosen == "seed_vmap":
+        results = run_replicates_vmapped(cell.spec, seeds, plan_cache)
+    else:
+        results = run_replicates_loop(cell.spec, seeds, plan_cache)
+    wall = time.time() - t0
+
+    ledger = results[0].ledger            # seed-independent by construction
+    curves = [r.accuracy for r in results]
+    return {
+        "label": cell.label,
+        "axis": cell.axis,
+        "value": cell.value,
+        "strategy": cell.strategy,
+        "engine": chosen,
+        "seeds": [int(s) for s in seeds],
+        "accuracy": curves,
+        "loss": [r.loss for r in results],
+        "summary": artifacts.summarize_curves(curves),
+        "diffusion_rounds": list(results[0].diffusion_rounds),
+        "iid_distance": [float(x) for x in results[0].iid_distance],
+        "comm": {
+            "subframes": int(ledger.subframes),
+            "transmitted_models": int(ledger.transmitted_models),
+            "transmitted_bits": float(ledger.transmitted_bits),
+            "pusch_bandwidth_hz_s": float(ledger.bandwidth_hz_s),  # Eq. 15
+            "uplink_models": int(ledger.uplink_models),
+            "downlink_models": int(ledger.downlink_models),
+        },
+        "wall_clock_s": wall,
+    }
+
+
+def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
+              out_dir: str | None = ".", engine: str = "auto",
+              plan_cache: PlanCache | None = None,
+              log=None, **spec_overrides) -> dict:
+    """Expand a registered sweep, run every cell, write the BENCH artifact.
+
+    Args:
+      name: registry key (``fig3_alpha`` … ``table2_strategies``).
+      smoke: smoke-sized grid (CPU-minutes) vs full grid.
+      seeds: replicate seeds; curves are reported per seed.
+      out_dir: where ``BENCH_feddif_<name>.json`` is written; ``None``
+        skips writing (used by tests and by callers composing artifacts).
+      engine: replication engine, see :func:`run_cell`.
+      plan_cache: share one across sweeps if desired; default is a fresh
+        cache per sweep (still shared across all cells *and* seeds).
+      spec_overrides: forwarded to ``SweepDef.expand`` (e.g. tiny
+        ``num_samples`` in tests).
+
+    Returns the artifact dict (also written to disk unless out_dir=None).
+    """
+    defn = get_sweep(name)
+    cells = expand_sweep(name, smoke=smoke, **spec_overrides)
+    cache = plan_cache if plan_cache is not None else PlanCache()
+    t0 = time.time()
+    records = []
+    for cell in cells:
+        rec = run_cell(cell, seeds, plan_cache=cache, engine=engine)
+        if log is not None:
+            s = rec["summary"]
+            log(f"{name},{rec['label']},engine={rec['engine']},"
+                f"peak_acc={s['peak_mean']:.4f},"
+                f"subframes={rec['comm']['subframes']},"
+                f"bandwidth_hz_s={rec['comm']['pusch_bandwidth_hz_s']:.3e},"
+                f"sec={rec['wall_clock_s']:.1f}")
+        records.append(rec)
+
+    artifact = artifacts.build_artifact(
+        sweep_name=name, figure=defn.figure, axis=defn.axis, smoke=smoke,
+        seeds=list(seeds), cells=records,
+        plan_cache_stats=cache.stats(),
+        wall_clock_s=time.time() - t0)
+    if out_dir is not None:
+        artifact["path"] = artifacts.write_artifact(artifact, out_dir)
+    return artifact

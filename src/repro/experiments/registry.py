@@ -1,0 +1,223 @@
+"""Declarative sweep registry — one entry per paper figure/table.
+
+Each :class:`SweepDef` declares *what the paper varied* (the axis and its
+values), *what it compared* (the strategies), and the experiment sizing in
+both ``smoke`` (CPU-minutes) and full (paper-approaching) modes.
+``SweepDef.expand`` turns an entry into concrete
+:class:`~repro.fl.experiment.ExperimentSpec` cells; the orchestrator
+(:mod:`repro.experiments.orchestrator`) runs them with multi-seed
+replication and writes ``BENCH_feddif_<sweep>.json`` artifacts.
+
+Registered sweeps (paper Sec. VI):
+
+==================  =======================  ==================================
+name                paper artifact           axis
+==================  =======================  ==================================
+``fig3_alpha``      Fig. 3                   Dirichlet concentration α
+``fig4_epsilon``    Fig. 4                   halting tolerance ε (min IID dist)
+``fig5_gamma_min``  Fig. 5                   min spectral efficiency γ_min
+``fig6_tasks``      Fig. 6 / Table I         ML task (logistic…cnn)
+``table2_strategies``  Table II              strategy (FedAvg…FedDif)
+==================  =======================  ==================================
+
+Consumers must not hand-roll their own grids: ``benchmarks/run.py`` and the
+``repro.launch.sweep`` CLI both expand the same registry, so a figure's
+definition lives in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.fl.experiment import ExperimentSpec
+from repro.fl.models import TASK_MODELS
+from repro.fl.server import FLConfig, STRATEGIES
+
+__all__ = ["SweepCell", "SweepDef", "REGISTRY", "register", "get_sweep",
+           "sweep_names", "expand_sweep"]
+
+# Axis name -> (which dataclass it lands on, field name).
+AXIS_TARGETS = {
+    "alpha": ("spec", "alpha"),
+    "epsilon": ("fl", "epsilon"),
+    "gamma_min": ("fl", "gamma_min"),
+    "task": ("spec", "task"),
+    "strategy": ("fl", "strategy"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One grid point of a sweep: an axis value × strategy, ready to run."""
+    sweep: str
+    figure: str
+    axis: str
+    value: Any
+    strategy: str
+    spec: ExperimentSpec
+
+    @property
+    def label(self) -> str:
+        if self.axis == "strategy":
+            return f"strategy={self.value}"
+        return f"{self.axis}={self.value}/{self.strategy}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepDef:
+    """Declarative description of one paper figure/table sweep."""
+    name: str
+    figure: str
+    axis: str                       # key of AXIS_TARGETS
+    values: tuple                   # full-mode axis values
+    smoke_values: tuple             # CPU-smoke axis values (subset)
+    description: str = ""
+    strategies: tuple = ("feddif",)   # compared per point (ignored when the
+                                      # axis itself is "strategy")
+    rounds: int = 20
+    smoke_rounds: int = 2
+    num_clients: int = 10
+    smoke_num_clients: int = 4
+    num_samples: int = 8000
+    smoke_num_samples: int = 1000
+    spec_overrides: dict = dataclasses.field(default_factory=dict)
+    fl_overrides: dict = dataclasses.field(default_factory=dict)
+
+    def expand(self, smoke: bool = True, topology_seed: int = 0,
+               **overrides) -> list[SweepCell]:
+        """Expand to concrete cells.
+
+        Args:
+          smoke: pick the smoke-sized grid (CPU-minutes) vs the full grid.
+          topology_seed: control-plane seed stamped on every cell so
+            diffusion plans are shareable across replicate seeds (see
+            ``FLConfig.topology_seed``).
+          overrides: extra ``ExperimentSpec`` field overrides (e.g.
+            ``num_samples=500`` for tests).
+        """
+        values = self.smoke_values if smoke else self.values
+        clients = self.smoke_num_clients if smoke else self.num_clients
+        rounds = self.smoke_rounds if smoke else self.rounds
+        samples = self.smoke_num_samples if smoke else self.num_samples
+
+        cells: list[SweepCell] = []
+        for value in values:
+            strategies = ((value,) if self.axis == "strategy"
+                          else self.strategies)
+            for strategy in strategies:
+                fl_kwargs: dict = dict(
+                    strategy=strategy, rounds=rounds, num_clients=clients,
+                    num_models=clients, seed=0, topology_seed=topology_seed)
+                spec_kwargs: dict = dict(
+                    task="fcn", alpha=1.0, num_samples=samples, data_seed=0)
+                fl_kwargs.update(self.fl_overrides)
+                spec_kwargs.update(self.spec_overrides)
+                where, field = AXIS_TARGETS[self.axis]
+                if where == "fl":
+                    fl_kwargs[field] = value
+                elif field != "strategy":
+                    spec_kwargs[field] = value
+                spec_kwargs.update(overrides)
+                spec = ExperimentSpec(fl=FLConfig(**fl_kwargs), **spec_kwargs)
+                cells.append(SweepCell(sweep=self.name, figure=self.figure,
+                                       axis=self.axis, value=value,
+                                       strategy=strategy, spec=spec))
+        return cells
+
+    def validate(self) -> None:
+        assert self.axis in AXIS_TARGETS, self.axis
+        assert set(self.smoke_values) <= set(self.values), self.name
+        for s in self.strategies:
+            assert s in STRATEGIES, s
+        if self.axis == "strategy":
+            for v in self.values:
+                assert v in STRATEGIES, v
+        if self.axis == "task":
+            for v in self.values:
+                assert v in TASK_MODELS, v
+
+
+REGISTRY: dict[str, SweepDef] = {}
+
+
+def register(defn: SweepDef) -> SweepDef:
+    defn.validate()
+    if defn.name in REGISTRY:
+        raise ValueError(f"duplicate sweep {defn.name!r}")
+    REGISTRY[defn.name] = defn
+    return defn
+
+
+def get_sweep(name: str) -> SweepDef:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown sweep {name!r}; "
+                       f"registered: {', '.join(sorted(REGISTRY))}")
+    return REGISTRY[name]
+
+
+def sweep_names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def expand_sweep(name: str, smoke: bool = True, **overrides
+                 ) -> list[SweepCell]:
+    """Convenience: ``get_sweep(name).expand(...)``."""
+    return get_sweep(name).expand(smoke=smoke, **overrides)
+
+
+# --------------------------------------------------------------- the entries
+
+register(SweepDef(
+    name="fig3_alpha",
+    figure="Fig. 3",
+    axis="alpha",
+    description="Accuracy / diffusion rounds / comm cost vs Dirichlet "
+                "concentration α (degree of non-IIDness).",
+    values=(0.1, 0.2, 0.5, 1.0, 100.0),
+    smoke_values=(0.2, 1.0),
+    strategies=("fedavg", "feddif"),
+))
+
+register(SweepDef(
+    name="fig4_epsilon",
+    figure="Fig. 4",
+    axis="epsilon",
+    description="Minimum tolerable IID distance ε — the halting knob of "
+                "Algorithm 2's diffusion loop (accuracy vs comm trade-off).",
+    values=(0.0, 0.02, 0.04, 0.1, 0.2),
+    smoke_values=(0.0, 0.2),
+    strategies=("feddif",),
+))
+
+register(SweepDef(
+    name="fig5_gamma_min",
+    figure="Fig. 5",
+    axis="gamma_min",
+    description="Minimum tolerable QoS γ_min (bit/s/Hz) — constraint (18e) "
+                "on which D2D links the auction may schedule.",
+    values=(0.5, 1.0, 2.0, 4.0),
+    smoke_values=(1.0, 4.0),
+    strategies=("feddif",),
+))
+
+register(SweepDef(
+    name="fig6_tasks",
+    figure="Fig. 6 / Table I",
+    axis="task",
+    description="FedDif vs FedAvg across the paper's five evaluation models.",
+    values=TASK_MODELS,
+    smoke_values=("logistic", "fcn"),
+    strategies=("fedavg", "feddif"),
+))
+
+register(SweepDef(
+    name="table2_strategies",
+    figure="Table II",
+    axis="strategy",
+    description="Communication efficiency (sub-frames / transmitted models / "
+                "Eq. 15 bandwidth) across strategies, incl. the auction-free "
+                "d2d_random_walk ablation.",
+    values=("fedavg", "stc", "fedswap", "d2d_random_walk", "feddif"),
+    smoke_values=("fedavg", "d2d_random_walk", "feddif"),
+    rounds=25,
+))

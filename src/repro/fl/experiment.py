@@ -32,7 +32,14 @@ class ExperimentSpec:
     data_seed: int = 0
 
 
-def run_experiment(spec: ExperimentSpec) -> FLResult:
+def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
+    """Run one cell of a paper figure/table.
+
+    ``plan_cache`` (a :class:`repro.core.diffusion.PlanCache`) is forwarded
+    to the FL runtime; combined with ``spec.fl.topology_seed`` it lets the
+    sweep orchestrator replay host-side diffusion plans across replicate
+    seeds instead of re-running the auction loop per seed.
+    """
     rng = np.random.default_rng(spec.data_seed)
     ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
                                 seed=spec.data_seed)
@@ -59,4 +66,5 @@ def run_experiment(spec: ExperimentSpec) -> FLResult:
         return float(a), float(l)
 
     return run_federated(model.init, model.loss, batches, part.dsi,
-                         part.data_sizes, eval_fn, spec.fl)
+                         part.data_sizes, eval_fn, spec.fl,
+                         plan_cache=plan_cache)

@@ -1,12 +1,37 @@
 """FL server runtime: FedDif (Algorithm 2) plus every comparison strategy of
 Sec. VI — FedAvg [1], FedSwap [21] (full diffusion, no auction), STC [41]
 (compressed uplink), TT-HF-like [22] (semi-decentralized cluster averaging),
-and D-PSGD-style gossip (fully decentralized; Appendix C Scenario 1).
+D-PSGD-style gossip (fully decentralized; Appendix C Scenario 1), and a
+``d2d_random_walk`` ablation (auction-free diffusion: models hop to random
+feasible neighbours, isolating FedDif's *planning* gain from its *mobility*
+gain on Table II's strategy axis).
+
+The strategy seam
+-----------------
+``run_federated`` is the single entry point; ``cfg.strategy`` selects a
+per-communication-round function ``_round_<name>``.  Every round function
+receives the same ingredients — the current global (or persistent per-client)
+params, a ``local_update`` closure, per-client batch thunks, the Dirichlet
+partition's DSI/data-size arrays, the wireless draw of the round
+(positions + uplink spectral efficiencies), and the shared
+:class:`ResourceLedger` — and returns the next global params plus its
+strategy-specific diffusion/IID bookkeeping.  Adding a strategy therefore
+means: append its name to :data:`STRATEGIES`, write one ``_round_*``
+function, and dispatch it in the round loop; the experiment harness
+(``repro.fl.experiment``), the sweep registry (``repro.experiments``) and the
+benchmarks pick it up by name with no further plumbing.
 
 The runtime is model-agnostic: pass any ``loss_fn(params, batch)`` +
 ``init_fn(key)`` + per-client batch iterators.  Communication is charged to a
 :class:`ResourceLedger` through the simulated wireless channel (Sec. III-D),
 reproducing the paper's sub-frame / transmitted-model metrics.
+
+Control-plane determinism: when ``cfg.topology_seed`` is set, each round's
+positions / channel draws come from a fresh ``default_rng([topology_seed, t])``
+stream, decoupled from the model-init seed.  Diffusion plans then depend only
+on (topology_seed, round, data partition, planner knobs), which lets a
+:class:`~repro.core.diffusion.PlanCache` passed to ``run_federated`` replan
+once per sweep cell and replay the plan across replicate seeds.
 """
 from __future__ import annotations
 
@@ -22,7 +47,7 @@ from repro.channels.resources import ResourceLedger, spectral_efficiency
 from repro.channels.topology import CellTopology
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
-from repro.core.diffusion import DiffusionPlanner
+from repro.core.diffusion import DiffusionPlanner, PlanCache, plan_cache_key
 from repro.core.dol import DiffusionState, iid_distance
 from repro.fl.client import make_local_update
 from repro.fl.compression import compressed_bits, stc_compress
@@ -32,7 +57,7 @@ Params = Any
 __all__ = ["FLConfig", "FLResult", "run_federated"]
 
 STRATEGIES = ("feddif", "fedavg", "fedswap", "stc", "tthf", "gossip",
-              "feddif_stc", "fedprox", "feddif_prox")
+              "feddif_stc", "fedprox", "feddif_prox", "d2d_random_walk")
 
 
 @dataclasses.dataclass
@@ -55,6 +80,8 @@ class FLConfig:
     tthf_global_period: int = 4
     bits_per_param: int = 32
     seed: int = 0
+    topology_seed: int | None = None   # decouple wireless draw from model seed
+    random_walk_hops: int = 3          # hops/round for d2d_random_walk
     max_diffusion_rounds: int | None = None
     eval_every: int = 1
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
@@ -90,7 +117,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                   client_batches: Sequence[Callable[[], list[dict]]],
                   dsi: np.ndarray, data_sizes: np.ndarray,
                   eval_fn: Callable[[Params], tuple[float, float]],
-                  cfg: FLConfig) -> FLResult:
+                  cfg: FLConfig,
+                  plan_cache: PlanCache | None = None) -> FLResult:
     """Run one FL experiment.
 
     Args:
@@ -101,6 +129,9 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
       dsi / data_sizes: from the Dirichlet partitioner.
       eval_fn: params -> (accuracy, loss) on held-out data.
       cfg: experiment configuration.
+      plan_cache: optional :class:`PlanCache` for FedDif strategies; only
+        consulted when ``cfg.topology_seed`` is set (otherwise the wireless
+        draw depends on ``cfg.seed`` and plans are not shareable).
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
     n, m = cfg.num_clients, cfg.num_models
@@ -134,13 +165,27 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                   if cfg.strategy in ("gossip", "tthf") else None)
 
     for t in range(cfg.rounds):
-        pos = topology.sample_positions(rng, n)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, rng), 0.05)
+        # Control-plane stream: per-round and model-seed-independent when
+        # topology_seed is set, so diffusion plans are cacheable across seeds.
+        if cfg.topology_seed is not None:
+            ctrl_rng = np.random.default_rng([cfg.topology_seed, t])
+        else:
+            ctrl_rng = rng
+        pos = topology.sample_positions(ctrl_rng, n)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng), 0.05)
 
         if cfg.strategy in ("feddif", "feddif_stc", "feddif_prox"):
+            cache_key = None
+            if plan_cache is not None and cfg.topology_seed is not None:
+                cache_key = plan_cache_key(
+                    cfg.topology_seed, t, dsi, data_sizes, cfg.epsilon,
+                    cfg.gamma_min, cfg.metric,
+                    extra=(n, m, model_bits, cfg.max_diffusion_rounds,
+                           cfg.allow_retraining, cfg.underlay))
             k_rounds, iid_now = _round_feddif(
                 global_params, local_update, client_batches, dsi, data_sizes,
-                planner, ledger, model_bits, pos, rng, cfg, up_gamma)
+                planner, ledger, model_bits, pos, ctrl_rng, cfg, up_gamma,
+                plan_cache=plan_cache, cache_key=cache_key)
             global_params = k_rounds.pop("agg")
             dif_hist.append(k_rounds["rounds"])
             iid_hist.append(iid_now)
@@ -161,22 +206,28 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         elif cfg.strategy == "fedswap":
             global_params, k_sw = _round_fedswap(
                 global_params, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, rng, channel, cfg, up_gamma)
+                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma)
             dif_hist.append(k_sw)
             iid_hist.append(0.0)
         elif cfg.strategy == "tthf":
             global_params = _round_tthf(
                 persistent, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, rng, channel, cfg, up_gamma, t)
+                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma, t)
             dif_hist.append(0)
             iid_hist.append(0.0)
         elif cfg.strategy == "gossip":
             persistent = _round_gossip(
                 persistent, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, rng, channel, cfg)
+                ledger, model_bits, pos, ctrl_rng, channel, cfg)
             global_params = agg.fedavg(persistent, list(data_sizes))
             dif_hist.append(1)
             iid_hist.append(0.0)
+        elif cfg.strategy == "d2d_random_walk":
+            global_params, k_walk, iid_now = _round_d2d_random_walk(
+                global_params, local_update, client_batches, dsi, data_sizes,
+                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma)
+            dif_hist.append(k_walk)
+            iid_hist.append(iid_now)
 
         if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
             a, l = eval_fn(global_params)
@@ -193,7 +244,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
 def _round_feddif(global_params, local_update, client_batches, dsi,
                   data_sizes, planner: DiffusionPlanner,
                   ledger: ResourceLedger, model_bits, pos, rng, cfg,
-                  up_gamma):
+                  up_gamma, plan_cache: PlanCache | None = None,
+                  cache_key: tuple | None = None):
     n, m = cfg.num_clients, cfg.num_models
     # BS clones the global model to M local models and broadcasts.
     models = [copy.deepcopy(global_params) for _ in range(m)]
@@ -208,9 +260,11 @@ def _round_feddif(global_params, local_update, client_batches, dsi,
         state.record_training(mi, holder, dsi[holder],
                               float(data_sizes[holder]))
 
-    # Diffusion rounds (plan + execute).
+    # Diffusion rounds (plan + execute).  The cache key (when given) captures
+    # every plan input, so a hit replays the stored plan and post-state.
     plan = planner.plan_communication_round(state, dsi, data_sizes, rng,
-                                            positions=pos)
+                                            positions=pos, cache=plan_cache,
+                                            cache_key=cache_key)
     for k in range(plan.num_rounds):
         for hop in plan.hops_in_round(k):
             bits = model_bits
@@ -303,6 +357,61 @@ def _round_fedswap(global_params, local_update, client_batches, data_sizes,
     for mi in range(n):
         ledger.charge_uplink(model_bits, float(up_gamma[int(holder[mi])]))
     return agg.fedavg(models, list(data_sizes)), swaps
+
+
+def _round_d2d_random_walk(global_params, local_update, client_batches, dsi,
+                           data_sizes, ledger, model_bits, pos, rng, channel,
+                           cfg, up_gamma):
+    """Auction-free diffusion baseline (Table II's third D2D point).
+
+    Models take ``cfg.random_walk_hops`` random D2D hops per communication
+    round: each hop moves a model to a uniformly random unvisited neighbour
+    whose link clears γ_min, and the receiver trains it.  Same mobility
+    pattern as FedDif, zero planning — the accuracy/bandwidth gap to FedDif
+    measures what the auction itself buys.
+    """
+    n, m = cfg.num_clients, cfg.num_models
+    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
+    models = [copy.deepcopy(global_params) for _ in range(m)]
+    holder = np.arange(m) % n
+    visited = np.zeros((m, n), dtype=bool)
+    for mi in range(m):
+        h = int(holder[mi])
+        models[mi], _ = local_update(models[mi], client_batches[h](), cfg.lr)
+        visited[mi, h] = True
+    dist = CellTopology(num_pues=n).pairwise_distances(pos)
+    hops_done = 0
+    for _ in range(cfg.random_walk_hops):
+        gains = channel.sample_gains(dist, rng)
+        gamma = spectral_efficiency(channel.snr(gains))
+        moved = False
+        for mi in range(m):
+            src = int(holder[mi])
+            cand = [j for j in range(n)
+                    if j != src and not visited[mi, j]
+                    and gamma[src, j] >= cfg.gamma_min]
+            if not cand:
+                continue
+            dst = int(rng.choice(cand))
+            ledger.charge_d2d(model_bits, max(float(gamma[src, dst]), 0.05))
+            models[mi], _ = local_update(models[mi], client_batches[dst](),
+                                         cfg.lr)
+            holder[mi] = dst
+            visited[mi, dst] = True
+            moved = True
+        if not moved:
+            break
+        hops_done += 1
+    for mi in range(m):
+        ledger.charge_uplink(model_bits, float(up_gamma[int(holder[mi])]))
+    # Chain weights and DoL follow Eq. (2): each model's mixture of the DSIs
+    # it visited, weighted by client data size.
+    chain_sizes = visited @ np.asarray(data_sizes, np.float64)
+    dol = (visited * np.asarray(data_sizes)[None, :]) @ np.asarray(dsi)
+    dol = dol / np.maximum(chain_sizes[:, None], 1e-9)
+    mean_iid = float(np.mean(np.asarray(iid_distance(dol, cfg.metric))))
+    out = agg.fedavg(models, [float(w) for w in chain_sizes])
+    return out, hops_done, mean_iid
 
 
 def _round_tthf(params, local_update, client_batches, data_sizes,

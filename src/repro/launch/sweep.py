@@ -1,0 +1,80 @@
+"""Paper-figure sweep CLI — reproduce a figure/table with one command.
+
+    PYTHONPATH=src python -m repro.launch.sweep --sweep fig3_alpha --smoke
+    PYTHONPATH=src python -m repro.launch.sweep --sweep all --full --seeds 3
+    PYTHONPATH=src python -m repro.launch.sweep --list
+
+Expands the named entry of the sweep registry
+(:mod:`repro.experiments.registry`), runs every cell with multi-seed
+replication (seed axis vmapped on the data plane where the strategy allows,
+process loop otherwise; diffusion plans cached across seeds), and writes a
+``BENCH_feddif_<sweep>.json`` artifact with per-cell accuracy curves, the
+Eq.-15 cumulative PUSCH bandwidth, sub-frame counts and wall-clock.
+``benchmarks/run.py`` drives the same registry — definitions live in one
+place.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.experiments import REGISTRY, run_sweep, sweep_names
+
+__all__ = ["main"]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.sweep",
+        description="Run a registered paper-figure sweep and write "
+                    "BENCH_feddif_<sweep>.json")
+    ap.add_argument("--sweep", default=None,
+                    help="registry name (see --list) or 'all'")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-sized grid (default unless --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-approaching grid sizes")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of replicate seeds (0..N-1)")
+    ap.add_argument("--engine", choices=["auto", "seed_vmap", "loop"],
+                    default="auto")
+    ap.add_argument("--out-dir", default=".",
+                    help="artifact directory (default: CWD)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered sweeps and exit")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.sweep:
+        print(f"{'name':20s} {'paper':16s} axis        description")
+        for name in sweep_names():
+            d = REGISTRY[name]
+            print(f"{name:20s} {d.figure:16s} {d.axis:11s} {d.description}")
+        return 0
+
+    smoke = not args.full
+    if args.seeds < 1:
+        print("error: --seeds must be >= 1", file=sys.stderr)
+        return 2
+    if args.sweep != "all" and args.sweep not in REGISTRY:
+        print(f"error: unknown sweep {args.sweep!r}; registered: "
+              f"{', '.join(sweep_names())} (or 'all')", file=sys.stderr)
+        return 2
+    names = sweep_names() if args.sweep == "all" else [args.sweep]
+    seeds = tuple(range(args.seeds))
+    for name in names:
+        print(f"# === sweep {name} ({'smoke' if smoke else 'full'}, "
+              f"seeds={list(seeds)}) ===", flush=True)
+        artifact = run_sweep(name, smoke=smoke, seeds=seeds,
+                             out_dir=args.out_dir, engine=args.engine,
+                             log=lambda s: print(s, flush=True))
+        pc = artifact["plan_cache"]
+        print(f"# wrote {artifact['path']} "
+              f"(cells={len(artifact['cells'])}, "
+              f"plan_cache hits={pc.get('hits', 0)} "
+              f"misses={pc.get('misses', 0)}, "
+              f"{artifact['wall_clock_s']:.1f}s)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+"""Sweep registry / orchestrator / plan-cache tests (repro.experiments)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.diffusion import DiffusionPlanner, PlanCache, plan_cache_key
+from repro.core.dol import DiffusionState
+from repro.experiments import (REGISTRY, SEED_VMAP_STRATEGIES, bench_path,
+                               expand_sweep, run_sweep, sweep_names)
+from repro.experiments.replicate import (run_replicates_loop,
+                                         run_replicates_vmapped)
+from repro.fl.experiment import ExperimentSpec
+from repro.fl.models import TASK_MODELS
+from repro.fl.server import STRATEGIES
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_has_all_paper_sweeps():
+    assert set(sweep_names()) >= {"fig3_alpha", "fig4_epsilon",
+                                  "fig5_gamma_min", "fig6_tasks",
+                                  "table2_strategies"}
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+@pytest.mark.parametrize("smoke", [True, False])
+def test_every_sweep_expands_to_valid_specs(name, smoke):
+    cells = expand_sweep(name, smoke=smoke)
+    assert cells, name
+    labels = [c.label for c in cells]
+    assert len(set(labels)) == len(labels), "cell labels must be unique"
+    for c in cells:
+        assert isinstance(c.spec, ExperimentSpec)
+        assert c.spec.fl.strategy in STRATEGIES
+        assert c.spec.task in TASK_MODELS
+        assert c.spec.alpha > 0
+        assert c.spec.fl.rounds >= 1
+        assert c.spec.fl.topology_seed is not None
+        # The axis value must actually land on the spec.
+        got = {"alpha": c.spec.alpha, "epsilon": c.spec.fl.epsilon,
+               "gamma_min": c.spec.fl.gamma_min, "task": c.spec.task,
+               "strategy": c.spec.fl.strategy}[c.axis]
+        assert got == c.value
+
+
+def test_smoke_grid_is_subset_of_full_grid():
+    for name in sweep_names():
+        d = REGISTRY[name]
+        assert set(d.smoke_values) <= set(d.values)
+
+
+def test_table2_strategy_axis_has_at_least_three_points():
+    d = REGISTRY["table2_strategies"]
+    assert len(d.values) >= 3
+    assert "d2d_random_walk" in d.values
+    assert "feddif" in d.values and "fedavg" in d.values
+
+
+def test_expand_overrides_reach_spec():
+    cells = expand_sweep("fig3_alpha", smoke=True, num_samples=123)
+    assert all(c.spec.num_samples == 123 for c in cells)
+
+
+# ---------------------------------------------------------------- plan cache
+
+def _tiny_partition(n=4, c=5, seed=0):
+    rng = np.random.default_rng(seed)
+    dsi = rng.dirichlet(np.ones(c), size=n).astype(np.float32)
+    sizes = rng.integers(50, 100, size=n).astype(np.float64)
+    return dsi, sizes
+
+
+def _seed_state(m, n, dsi, sizes):
+    state = DiffusionState.init(m, n, dsi.shape[1])
+    for mi in range(m):
+        h = int(state.holder[mi])
+        state.record_training(mi, h, dsi[h], float(sizes[h]))
+    return state
+
+
+def test_plan_cache_hit_replays_plan_and_state():
+    dsi, sizes = _tiny_partition()
+    n = m = 4
+    cache = PlanCache()
+    key = plan_cache_key(7, 0, dsi, sizes, 0.04, 1.0, "w1_norm",
+                         extra=(n, m))
+
+    planner = DiffusionPlanner(epsilon=0.04)
+    s1 = _seed_state(m, n, dsi, sizes)
+    rng1 = np.random.default_rng([7, 0])
+    plan1 = planner.plan_communication_round(s1, dsi, sizes, rng1,
+                                             cache=cache, cache_key=key)
+    assert cache.stats() == {"hits": 0, "misses": 1, "entries": 1}
+
+    s2 = _seed_state(m, n, dsi, sizes)
+    rng2 = np.random.default_rng([7, 0])
+    plan2 = planner.plan_communication_round(s2, dsi, sizes, rng2,
+                                             cache=cache, cache_key=key)
+    assert cache.stats()["hits"] == 1
+    assert plan2 is plan1                      # replayed, not replanned
+    np.testing.assert_array_equal(s1.holder, s2.holder)
+    np.testing.assert_allclose(s1.dol, s2.dol)
+    np.testing.assert_array_equal(s1.visited, s2.visited)
+
+
+def test_plan_cache_key_distinguishes_inputs():
+    dsi, sizes = _tiny_partition()
+    k1 = plan_cache_key(0, 0, dsi, sizes, 0.04, 1.0, "w1_norm")
+    assert k1 == plan_cache_key(0, 0, dsi.copy(), sizes.copy(), 0.04, 1.0,
+                                "w1_norm")
+    assert k1 != plan_cache_key(0, 1, dsi, sizes, 0.04, 1.0, "w1_norm")
+    assert k1 != plan_cache_key(0, 0, dsi, sizes, 0.1, 1.0, "w1_norm")
+    assert k1 != plan_cache_key(0, 0, dsi, sizes, 0.04, 2.0, "w1_norm")
+    dsi2 = dsi.copy()
+    dsi2[0, 0] += 0.25
+    assert k1 != plan_cache_key(0, 0, dsi2, sizes, 0.04, 1.0, "w1_norm")
+
+
+def test_plan_cache_lru_eviction():
+    dsi, sizes = _tiny_partition()
+    cache = PlanCache(max_entries=2)
+    planner = DiffusionPlanner(epsilon=0.04)
+    for t in range(3):
+        key = plan_cache_key(0, t, dsi, sizes, 0.04, 1.0, "w1_norm")
+        s = _seed_state(4, 4, dsi, sizes)
+        planner.plan_communication_round(s, dsi, sizes,
+                                         np.random.default_rng([0, t]),
+                                         cache=cache, cache_key=key)
+    assert len(cache) == 2
+
+
+# ------------------------------------------------------- replication engines
+
+def _tiny_cells(name="fig3_alpha"):
+    return expand_sweep(name, smoke=True, num_samples=300)
+
+
+def test_vmapped_and_loop_engines_agree():
+    cell = next(c for c in _tiny_cells() if c.strategy == "feddif")
+    cache = PlanCache()
+    r_v = run_replicates_vmapped(cell.spec, (0,), cache)
+    r_l = run_replicates_loop(cell.spec, (0,), cache)
+    assert cache.stats()["hits"] >= 1          # loop replayed vmap's plans
+    np.testing.assert_allclose(r_v[0].accuracy, r_l[0].accuracy, atol=2e-3)
+    assert r_v[0].ledger.as_dict() == r_l[0].ledger.as_dict()
+
+
+def test_vmapped_engine_rejects_unsupported_strategy():
+    cell = next(c for c in _tiny_cells("table2_strategies")
+                if c.strategy == "d2d_random_walk")
+    assert cell.strategy not in SEED_VMAP_STRATEGIES
+    with pytest.raises(ValueError):
+        run_replicates_vmapped(cell.spec, (0,))
+
+
+def test_vmapped_engine_requires_topology_seed():
+    cell = next(c for c in _tiny_cells() if c.strategy == "fedavg")
+    spec = dataclasses.replace(
+        cell.spec, fl=dataclasses.replace(cell.spec.fl, topology_seed=None))
+    with pytest.raises(ValueError):
+        run_replicates_vmapped(spec, (0,))
+
+
+def test_replicate_seeds_differ_on_data_plane():
+    cell = next(c for c in _tiny_cells() if c.strategy == "fedavg")
+    r = run_replicates_vmapped(cell.spec, (0, 1))
+    assert r[0].config.seed == 0 and r[1].config.seed == 1
+    # Same communication (control plane shared) ...
+    assert r[0].ledger.as_dict() == r[1].ledger.as_dict()
+    # ... but different models (init seeds differ).
+    assert r[0].accuracy != r[1].accuracy
+
+
+# ----------------------------------------------------------- end-to-end + IO
+
+def test_smallest_sweep_end_to_end_writes_valid_artifact(tmp_path):
+    art = run_sweep("fig5_gamma_min", smoke=True, seeds=(0,),
+                    out_dir=str(tmp_path), num_samples=300)
+    path = bench_path("fig5_gamma_min", str(tmp_path))
+    assert art["path"] == path
+    on_disk = json.load(open(path))
+    assert on_disk["sweep"] == "fig5_gamma_min"
+    assert on_disk["axis"] == "gamma_min"
+    assert on_disk["mode"] == "smoke"
+    assert on_disk["plan_cache"]["misses"] >= 1
+    assert len(on_disk["cells"]) == len(REGISTRY["fig5_gamma_min"]
+                                        .smoke_values)
+    for c in on_disk["cells"]:
+        assert c["accuracy"] and c["accuracy"][0], "per-seed accuracy curve"
+        assert c["summary"]["peak_mean"] is not None
+        assert c["comm"]["subframes"] > 0
+        assert "pusch_bandwidth_hz_s" in c["comm"]
+        assert c["wall_clock_s"] >= 0

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 import scipy.optimize as so
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.auction import AuctionConfig, run_auction
