@@ -36,8 +36,12 @@ import numpy as np
 sys.path.insert(0, "src")
 
 
+EXECUTOR = "host"      # set by --executor; stamped on every registry sweep
+
+
 def _fl(strategy, alpha=1.0, rounds=6, clients=8, task="fcn", **kw):
     from repro.fl import ExperimentSpec, FLConfig, run_experiment
+    kw.setdefault("executor", EXECUTOR)
     spec = ExperimentSpec(
         task=task, alpha=alpha, num_samples=4000,
         fl=FLConfig(strategy=strategy, rounds=rounds, num_clients=clients,
@@ -71,7 +75,7 @@ def _run_registry_sweep(bench_name: str, sweep_name: str, full: bool):
     """Drive one registry sweep; print per-cell CSV lines; write artifact."""
     from repro.experiments import run_sweep
     art = run_sweep(sweep_name, smoke=not full, seeds=(0,),
-                    out_dir="benchmarks/results")
+                    out_dir="benchmarks/results", executor=EXECUTOR)
     for c in art["cells"]:
         curve = np.mean(np.asarray(c["accuracy"]), axis=0)
         print(f"{bench_name},{c['label']},engine={c['engine']},"
@@ -131,6 +135,39 @@ def table2_comm_eff(full: bool):
               f"subframes={int(comm['subframes']*frac)},"
               f"models={int(comm['transmitted_models']*frac)},"
               f"bits={comm['transmitted_bits']*frac:.3e}", flush=True)
+
+
+def executor_speedup(full: bool):
+    """RoundSchedule executor seam: same cell, host vs fleet data plane.
+
+    The schedule (and therefore the ledger) is identical by construction;
+    the fleet executor replaces the per-client Python loop (one jitted call
+    per client per batch, with a host sync per step) by one vmapped call per
+    batch over the whole client-stacked fleet — the wall-clock gap is pure
+    dispatch/sync overhead and grows with fleet size."""
+    from repro.fl import ExperimentSpec, FLConfig, run_experiment
+    clients = 32 if full else 20
+    rounds = 4 if full else 3
+    rows = {}
+    for executor in ("host", "fleet"):
+        spec = ExperimentSpec(
+            task="fcn", alpha=1.0, num_samples=6000,
+            fl=FLConfig(strategy="feddif", rounds=rounds,
+                        num_clients=clients, num_models=clients, seed=0,
+                        topology_seed=0, executor=executor))
+        t0 = time.time()
+        r = run_experiment(spec)
+        dt = time.time() - t0
+        rows[executor] = (dt, r)
+        print(f"executor_speedup,executor={executor},clients={clients},"
+              f"rounds={rounds},sec={dt:.1f},acc={max(r.accuracy):.4f},"
+              f"subframes={r.ledger.subframes}", flush=True)
+    host_t, host_r = rows["host"]
+    fleet_t, fleet_r = rows["fleet"]
+    assert host_r.ledger.as_dict() == fleet_r.ledger.as_dict(), \
+        "executors must charge identical schedules"
+    print(f"executor_speedup,speedup={host_t / max(fleet_t, 1e-9):.2f}x,"
+          f"ledger_identical=True", flush=True)
 
 
 def kernels_microbench(full: bool):
@@ -223,14 +260,20 @@ def appendix_scenarios(full: bool):
 
 BENCHES = [fig2_convergence, fig3_alpha_sweep, fig4_epsilon_sweep,
            fig5_qos_sweep, fig6_tasks, table1_accuracy, table2_comm_eff,
-           appendix_scenarios, kernels_microbench, roofline_summary]
+           executor_speedup, appendix_scenarios, kernels_microbench,
+           roofline_summary]
 
 
 def main() -> None:
+    global EXECUTOR
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--executor", choices=["host", "fleet"], default="host",
+                    help="FL data plane for the figure/table benches "
+                         "(executor_speedup always compares both)")
     args = ap.parse_args()
+    EXECUTOR = args.executor
     t0 = time.time()
     for bench in BENCHES:
         if args.only and args.only not in bench.__name__:

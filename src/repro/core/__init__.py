@@ -4,6 +4,8 @@
 - ``matching``: Kuhn–Munkres assignment (Algorithm 1's solver).
 - ``auction``: bids, feasibility constraints (18b–18f), winner selection.
 - ``diffusion``: diffusion-round planner (Algorithm 2 control plane).
+- ``schedule``: the strategy-agnostic RoundSchedule IR + ledger replay
+  (the seam between schedulers and executors).
 - ``aggregation``: FedAvg (Eq. 11) + Prop.-1 divergence bound.
 """
 from repro.core.dol import (DiffusionState, dsi_from_counts, iid_distance,
@@ -13,6 +15,9 @@ from repro.core.dol import (DiffusionState, dsi_from_counts, iid_distance,
 from repro.core.matching import max_weight_matching, hungarian_min_cost
 from repro.core.auction import AuctionConfig, AuctionResult, compute_bids, run_auction
 from repro.core.diffusion import DiffusionHop, DiffusionPlan, DiffusionPlanner
+from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule, TrainOp,
+                                 WireEvent, charge_schedule,
+                                 complete_round_permutation)
 from repro.core.aggregation import (fedavg, weight_distance, divergence_bound,
                                     model_bits)
 
@@ -23,5 +28,7 @@ __all__ = [
     "max_weight_matching", "hungarian_min_cost",
     "AuctionConfig", "AuctionResult", "compute_bids", "run_auction",
     "DiffusionHop", "DiffusionPlan", "DiffusionPlanner",
+    "MixOp", "PermuteOp", "RoundSchedule", "TrainOp", "WireEvent",
+    "charge_schedule", "complete_round_permutation",
     "fedavg", "weight_distance", "divergence_bound", "model_bits",
 ]

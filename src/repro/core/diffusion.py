@@ -23,7 +23,7 @@ from repro.channels.fading import ChannelModel
 from repro.channels.resources import spectral_efficiency
 from repro.channels.topology import CellTopology
 from repro.core import dol as dol_lib
-from repro.core.auction import AuctionConfig, AuctionResult, run_auction
+from repro.core.auction import AuctionConfig, run_auction
 
 __all__ = ["DiffusionHop", "DiffusionPlan", "DiffusionPlanner", "PlanCache",
            "plan_cache_key"]
@@ -55,53 +55,24 @@ class DiffusionPlan:
         """Per-round (permutation, train_mask) for the SPMD ppermute path.
 
         The auction's matching is *partial* (some models stay put), but
-        ``jax.lax.ppermute`` needs a bijection over client slots.  We complete
-        the partial mapping src→dst to a permutation: unscheduled sources are
-        matched to leftover destinations (these slots carry models that will
-        NOT train this round — ``train_mask`` marks the slots whose freshly
-        received model performs a local update, i.e. the scheduled dsts).
+        ``jax.lax.ppermute`` needs a bijection over client slots.
+        :func:`repro.core.schedule.complete_round_permutation` completes the
+        partial mapping src→dst to a permutation (unscheduled sources stay
+        put where possible, displaced idle models are "parked" on free
+        slots); ``train_mask`` marks the slots whose freshly received model
+        performs a local update, i.e. the scheduled dsts.
 
         perm[k][c] = slot that receives slot c's buffer in round k.
-
-        Internally tracks ``slot_of_model`` with the invariant that each slot
-        holds at most one model (the paper allows a PUE to *hold* several
-        models; an SPMD buffer cannot, so displaced idle models are "parked"
-        in a free slot — an upper bound on communication, excluded from the
-        ledger since the real system would not move them).
         """
+        from repro.core.schedule import complete_round_permutation
         num_models = (max(h.model for h in self.hops) + 1) if self.hops else 0
         slot_of_model = np.arange(num_models) % max(num_clients, 1)
         out = []
         for k in range(self.num_rounds):
-            hops = self.hops_in_round(k)
-            mask = np.zeros(num_clients, dtype=bool)
-            perm = np.full(num_clients, -1, dtype=np.int64)
-            used_dst: set[int] = set()
-            for h in hops:
-                src = int(slot_of_model[h.model])
-                assert h.dst not in used_dst, "matching must be 1-1 over dsts"
-                assert perm[src] == -1, "slot invariant violated"
-                perm[src] = h.dst
-                used_dst.add(h.dst)
-                mask[h.dst] = True
-            # Complete the partial mapping to a bijection (identity where
-            # possible, otherwise any unused destination: "parking" transfers
-            # for displaced idle buffers).
-            free = [d for d in range(num_clients) if d not in used_dst]
-            for src in range(num_clients):
-                if perm[src] >= 0:
-                    continue
-                if src not in used_dst:
-                    perm[src] = src
-                    used_dst.add(src)
-                    free.remove(src)
-                else:
-                    perm[src] = free.pop(0)
-                    used_dst.add(int(perm[src]))
-            assert sorted(perm.tolist()) == list(range(num_clients)), perm
-            # Every buffer moves by the bijection; slot uniqueness preserved.
-            slot_of_model = perm[slot_of_model]
-            out.append((perm, mask))
+            hops = [(h.model, h.dst) for h in self.hops_in_round(k)]
+            src_of_dst, mask, slot_of_model = complete_round_permutation(
+                hops, slot_of_model, num_clients)
+            out.append((np.argsort(src_of_dst), mask))
         return out
 
 

@@ -1,0 +1,202 @@
+"""RoundSchedule — the strategy-agnostic IR between schedulers and executors.
+
+Every FL strategy (FedDif's auction plan, FedAvg's broadcast, FedSwap's random
+swaps, gossip's pairings, …) expresses one communication round as a
+:class:`RoundSchedule`: a list of slot-level *ops* (train / permute+train /
+group-mix), the *wire events* to charge against the
+:class:`~repro.channels.resources.ResourceLedger`, and the final aggregation
+weights.  Scheduling is pure — no training, no parameters — which is what
+makes a schedule
+
+* **executable anywhere**: ``repro.fl.executors.HostExecutor`` replays it on a
+  per-slot pytree list (the reference semantics), ``FleetExecutor`` replays
+  the *same object* on a client-stacked pytree with vmapped/jitted steps, and
+  ``repro.launch.fl_spmd`` replays it on a mesh-sharded LM fleet;
+* **chargeable once**: :func:`charge_schedule` replays the wire events into a
+  ledger, so host and fleet runs report bit-identical Table-II metrics; and
+* **cacheable**: FedDif's plans already memoize in
+  :class:`~repro.core.diffusion.PlanCache`; the schedule derived from a plan
+  is deterministic given the plan.
+
+Slots vs clients vs models
+--------------------------
+A schedule is written over ``num_slots`` *client slots* (slot ``c`` always
+draws client ``c``'s batches).  Models are placed on slots; the paper lets a
+PUE hold several models, which an SPMD buffer cannot, so partial hop sets are
+completed to slot bijections by :func:`complete_round_permutation` (displaced
+idle models are "parked" on free slots — an artifact excluded from the
+ledger, since the real system would not move them).  This generalizes what
+``DiffusionPlan.as_permutations`` did for FedDif to every strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["WireEvent", "TrainOp", "PermuteOp", "MixOp", "RoundSchedule",
+           "complete_round_permutation", "charge_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireEvent:
+    """One charged transmission: ``kind`` in {"d2d", "uplink", "downlink"}.
+
+    ``gamma`` is stored already clamped to the scheduler's feasibility floor,
+    so replaying events is a pure ledger operation.
+    """
+    kind: str
+    bits: float
+    gamma: float
+    n_users: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOp:
+    """Local update at every slot where ``train_mask`` is True."""
+    train_mask: np.ndarray          # (C,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class PermuteOp:
+    """One diffusion round: slot ``c`` receives the model held by slot
+    ``src_of_dst[c]``, then the slots in ``train_mask`` run a local update
+    (the auction winners / hop receivers).
+
+    ``compress`` marks STC-compressed hops (``feddif_stc``): payloads feeding
+    a *trained* destination are replaced by ``ref + STC(params − ref)``
+    before the move, where ``ref`` is the round-start global model every PUE
+    holds from the broadcast.  Parked (untrained) moves ship uncompressed —
+    they are an SPMD artifact and never touch the wire or the ledger.
+    """
+    src_of_dst: np.ndarray          # (C,) int — bijection over slots
+    train_mask: np.ndarray          # (C,) bool
+    compress: bool = False
+
+    def compress_src_mask(self) -> np.ndarray:
+        """(C,) bool — slots whose *outgoing* payload is STC-compressed
+        (sources feeding a trained destination)."""
+        mask = np.zeros_like(self.train_mask)
+        mask[self.src_of_dst[self.train_mask]] = True
+        return mask
+
+
+@dataclasses.dataclass(frozen=True)
+class MixOp:
+    """In-place group averaging: every slot in a group is overwritten by the
+    group's data-size-weighted mean (gossip pairs, TT-HF clusters, the BS
+    broadcast when one group spans all slots)."""
+    groups: tuple                   # of (members: tuple[int], weights: tuple[float])
+
+    def matrix(self, num_slots: int) -> np.ndarray:
+        """(C, C) row-stochastic mixing matrix for the stacked executor."""
+        w = np.eye(num_slots, dtype=np.float32)
+        for members, weights in self.groups:
+            ws = np.asarray(weights, np.float64)
+            ws = (ws / ws.sum()).astype(np.float32)
+            for i in members:
+                w[i, :] = 0.0
+                w[i, list(members)] = ws
+        return w
+
+
+@dataclasses.dataclass
+class RoundSchedule:
+    """One communication round, strategy-agnostic.
+
+    Attributes:
+      num_slots: C — client slots (slot c trains on client c's data).
+      ops: ordered TrainOp / PermuteOp / MixOp steps.
+      wire: every transmission to charge (see :func:`charge_schedule`).
+      agg: ordered ``(slot, weight)`` pairs — Eq. (11) aggregation over the
+        models' final slots.  The order reproduces the host reference's
+        model-major summation; :meth:`slot_weights` is the dense per-slot
+        form for stacked executors.  With ``persistent=True`` the aggregate
+        is *reported* (evaluated) but slots keep their state.
+      agg_mode: "params" (weighted mean of slot params) or "stc_delta"
+        (weighted mean of STC-compressed deltas vs the round-start global —
+        the STC [41] uplink).
+      persistent: slots carry state across communication rounds (gossip,
+        TT-HF); otherwise each round starts from a broadcast of the global.
+      stc_sparsity: sparsity for compressed hops / stc_delta aggregation.
+      diffusion_rounds / mean_iid: strategy bookkeeping surfaced into
+        FLResult histories.
+    """
+    num_slots: int
+    ops: list
+    wire: list
+    agg: list
+    agg_mode: str = "params"
+    persistent: bool = False
+    stc_sparsity: float = 0.01
+    diffusion_rounds: int = 0
+    mean_iid: float = 0.0
+
+    def slot_weights(self) -> np.ndarray:
+        """Dense (C,) aggregation weight vector (zero for empty slots)."""
+        w = np.zeros(self.num_slots, np.float64)
+        for slot, weight in self.agg:
+            w[slot] += weight
+        return w
+
+
+def complete_round_permutation(hops: list, slot_of_model: np.ndarray,
+                               num_slots: int
+                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Complete a partial set of model hops into a slot bijection.
+
+    Args:
+      hops: ``(model, dst_client)`` pairs, 1-1 over destinations.
+      slot_of_model: (M,) current slot of every model (mutated copy returned,
+        input untouched).
+      num_slots: C.
+
+    Returns ``(src_of_dst, train_mask, new_slot_of_model)`` where
+    ``src_of_dst[c]`` is the slot whose buffer lands in slot ``c`` and
+    ``train_mask`` marks the scheduled destinations.  Unscheduled sources
+    stay put when possible, otherwise they are parked on any free
+    destination (communication upper bound, excluded from the ledger).
+    """
+    mask = np.zeros(num_slots, dtype=bool)
+    dst_of_src = np.full(num_slots, -1, dtype=np.int64)
+    used_dst: set[int] = set()
+    for model, dst in hops:
+        src = int(slot_of_model[model])
+        assert dst not in used_dst, "matching must be 1-1 over dsts"
+        assert dst_of_src[src] == -1, "slot invariant violated"
+        dst_of_src[src] = dst
+        used_dst.add(int(dst))
+        mask[dst] = True
+    free = [d for d in range(num_slots) if d not in used_dst]
+    for src in range(num_slots):
+        if dst_of_src[src] >= 0:
+            continue
+        if src not in used_dst:
+            dst_of_src[src] = src
+            used_dst.add(src)
+            free.remove(src)
+        else:
+            dst_of_src[src] = free.pop(0)
+            used_dst.add(int(dst_of_src[src]))
+    assert sorted(dst_of_src.tolist()) == list(range(num_slots)), dst_of_src
+    new_slot_of_model = dst_of_src[slot_of_model]
+    src_of_dst = np.argsort(dst_of_src)
+    return src_of_dst, mask, new_slot_of_model
+
+
+def charge_schedule(ledger, schedule: RoundSchedule) -> None:
+    """Replay a schedule's wire events into a ResourceLedger.
+
+    The single charging path shared by every executor: communication cost is
+    a property of the *schedule*, not of who executes it, so host and fleet
+    runs of the same schedule report identical Table-II metrics.
+    """
+    for ev in schedule.wire:
+        if ev.kind == "d2d":
+            ledger.charge_d2d(ev.bits, ev.gamma)
+        elif ev.kind == "uplink":
+            ledger.charge_uplink(ev.bits, ev.gamma)
+        elif ev.kind == "downlink":
+            ledger.charge_downlink(ev.bits, ev.gamma, ev.n_users)
+        else:
+            raise ValueError(f"unknown wire event kind {ev.kind!r}")

@@ -15,26 +15,29 @@ or ``data`` on-pod for paper-scale fleets (M ≈ 10 small models).
 * selective training (auction winners only) = `train_mask` select between
   updated and carried state — FedDif's partial participation.
 
-Relation to the strategy seam
------------------------------
+Relation to the RoundSchedule / Executor seam
+---------------------------------------------
 This module is a *data plane*, deliberately strategy-agnostic: it executes
-whatever per-round ``(src_of_dst, train_mask, weights)`` schedule it is
-handed and never consults the auction, the DoL state, or the wireless
-ledger.  The *control plane* — ``repro.core.diffusion.DiffusionPlanner``
-(host) — decides which strategy's schedule those arrays encode:
-``DiffusionPlan.as_permutations`` completes FedDif's partial auction matching
-into the bijection consumed here; an all-``True`` mask with an identity
-permutation is FedAvg; a full random permutation is FedSwap.  New
-host-loop strategies (see ``repro.fl.server``'s ``_round_*`` seam) map onto
-this plane by expressing their round as such per-round permutations —
+whatever ``(src_of_dst, train_mask, weights)`` arrays it is handed and never
+consults the auction, the DoL state, or the wireless ledger.  Those arrays
+are one op of a :class:`~repro.core.schedule.RoundSchedule` — the IR every
+strategy scheduler in ``repro.fl.schedulers`` emits:
+:func:`~repro.core.schedule.complete_round_permutation` completes a partial
+hop set (FedDif's auction matching, FedSwap's swaps, the random walk's
+waves) into the slot bijection consumed here; an all-``True`` mask with an
+identity permutation is FedAvg.  ``repro.fl.executors.FleetExecutor`` runs
+whole schedules on a client-stacked fleet out of this module's primitives
+(vmapped train, :func:`diffuse_params`, :func:`fleet_aggregate`, and
+:func:`masked_stc_compress` for the STC-compressed hops of ``stc`` /
+``feddif_stc``); ``repro.launch.fl_spmd`` does the same for LM fleets with
+:func:`make_diffusion_step`.  Adding a strategy means writing a scheduler —
 nothing in this file needs to change.  The same split is what the sweep
-orchestrator's plan cache exploits: plans are pure host-side schedules, so
-they can be replayed across replicate seeds while this data plane does all
+orchestrator's plan cache exploits: schedules are pure host-side control
+state, replayable across replicate seeds, while this data plane does all
 seed-dependent work.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
@@ -47,7 +50,7 @@ from repro.train.trainstep import TrainState, make_train_step
 Params = Any
 
 __all__ = ["make_fleet_train_step", "make_diffusion_step", "fleet_aggregate",
-           "diffuse_params"]
+           "diffuse_params", "masked_stc_compress"]
 
 
 def diffuse_params(params: Params, perm: jax.Array) -> Params:
@@ -70,6 +73,26 @@ def fleet_aggregate(params: Params, weights: jax.Array) -> Params:
         return jnp.broadcast_to(avg[None], x.shape).astype(x.dtype)
 
     return jax.tree.map(one, params)
+
+
+def masked_stc_compress(params: Params, ref: Params, mask: jax.Array,
+                        sparsity: float = 0.01) -> Params:
+    """STC-compress selected slots of a client-stacked pytree against ``ref``.
+
+    Slot ``c`` with ``mask[c]`` becomes ``ref + STC(params[c] − ref)`` — the
+    paper's compressed D2D payload (the receiver reconstructs the round-start
+    global plus the ternarized delta); other slots pass through untouched.
+    ``ref`` is unstacked (the broadcast global every PUE already holds).
+    Used by the fleet executor for ``stc`` / ``feddif_stc`` hops and uplinks.
+    """
+    from repro.fl.compression import stc_compress_leaf
+
+    def leaf(x, r):
+        comp = jax.vmap(lambda xi: r + stc_compress_leaf(xi - r, sparsity))(x)
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, comp, x)
+
+    return jax.tree.map(leaf, params, ref)
 
 
 def make_fleet_train_step(model: Model, opt: opt_lib.Optimizer,

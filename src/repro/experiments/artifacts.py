@@ -40,14 +40,24 @@ def summarize_curves(curves: list[list[float]]) -> dict:
 
 def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
                    seeds: list[int], cells: list[dict],
+                   executor: str = "host",
                    plan_cache_stats: dict | None = None,
                    wall_clock_s: float | None = None) -> dict:
+    """Assemble one ``BENCH_feddif_<sweep>.json`` payload.
+
+    ``plan_cache_stats`` carries the sweep-level
+    :meth:`~repro.core.diffusion.PlanCache.stats` (hits / misses / entries);
+    each cell record additionally carries its own per-cell hit/miss delta
+    under ``cells[i]["plan_cache"]`` so cache efficacy is visible in the
+    perf trajectory, not just as one sweep-wide total.
+    """
     return {
         "schema_version": SCHEMA_VERSION,
         "sweep": sweep_name,
         "figure": figure,
         "axis": axis,
         "mode": "smoke" if smoke else "full",
+        "executor": executor,
         "seeds": [int(s) for s in seeds],
         "created_unix": time.time(),
         "wall_clock_s": wall_clock_s,

@@ -25,7 +25,6 @@ drives the same function, so sweep definitions exist in exactly one place
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Sequence
 
@@ -40,6 +39,11 @@ __all__ = ["run_cell", "run_sweep"]
 
 
 def _pick_engine(cell: SweepCell, engine: str) -> str:
+    if cell.spec.fl.executor == "fleet":
+        # The fleet executor already vmaps the *client* axis; replicate seeds
+        # run on the loop engine (the seed_vmap engine is its own host-side
+        # seed-stacked data plane and would bypass the executor seam).
+        return "loop"
     if engine == "auto":
         return ("seed_vmap" if cell.strategy in SEED_VMAP_STRATEGIES
                 else "loop")
@@ -52,17 +56,28 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
     """Run one sweep cell at every replicate seed; returns the JSON record.
 
     ``engine``: ``"auto"`` (vmap the seed axis when the strategy allows),
-    ``"seed_vmap"``, or ``"loop"``.
+    ``"seed_vmap"``, or ``"loop"``; cells with ``fl.executor == "fleet"``
+    always take the loop engine (the executor vmaps the client axis).
     """
     if not len(seeds):
         raise ValueError("run_cell needs at least one replicate seed")
     chosen = _pick_engine(cell, engine)
+    cache_before = plan_cache.stats() if plan_cache is not None else None
     t0 = time.time()
     if chosen == "seed_vmap":
         results = run_replicates_vmapped(cell.spec, seeds, plan_cache)
     else:
         results = run_replicates_loop(cell.spec, seeds, plan_cache)
     wall = time.time() - t0
+
+    # Per-cell plan-cache delta: how much of this cell's control plane was
+    # replayed vs replanned (sweep cache efficacy in the perf trajectory).
+    cache_stats = None
+    if plan_cache is not None:
+        after = plan_cache.stats()
+        cache_stats = {"hits": after["hits"] - cache_before["hits"],
+                       "misses": after["misses"] - cache_before["misses"],
+                       "entries": after["entries"]}
 
     ledger = results[0].ledger            # seed-independent by construction
     curves = [r.accuracy for r in results]
@@ -72,6 +87,8 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
         "value": cell.value,
         "strategy": cell.strategy,
         "engine": chosen,
+        "executor": cell.spec.fl.executor,
+        "plan_cache": cache_stats,
         "seeds": [int(s) for s in seeds],
         "accuracy": curves,
         "loss": [r.loss for r in results],
@@ -92,6 +109,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
 
 def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
               out_dir: str | None = ".", engine: str = "auto",
+              executor: str = "host",
               plan_cache: PlanCache | None = None,
               log=None, **spec_overrides) -> dict:
     """Expand a registered sweep, run every cell, write the BENCH artifact.
@@ -103,6 +121,8 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
       out_dir: where ``BENCH_feddif_<name>.json`` is written; ``None``
         skips writing (used by tests and by callers composing artifacts).
       engine: replication engine, see :func:`run_cell`.
+      executor: ``FLConfig.executor`` stamped on every cell — ``"host"``
+        reference loop or ``"fleet"`` client-stacked data plane.
       plan_cache: share one across sweeps if desired; default is a fresh
         cache per sweep (still shared across all cells *and* seeds).
       spec_overrides: forwarded to ``SweepDef.expand`` (e.g. tiny
@@ -111,7 +131,8 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
     Returns the artifact dict (also written to disk unless out_dir=None).
     """
     defn = get_sweep(name)
-    cells = expand_sweep(name, smoke=smoke, **spec_overrides)
+    cells = expand_sweep(name, smoke=smoke, executor=executor,
+                         **spec_overrides)
     cache = plan_cache if plan_cache is not None else PlanCache()
     t0 = time.time()
     records = []
@@ -128,7 +149,7 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
 
     artifact = artifacts.build_artifact(
         sweep_name=name, figure=defn.figure, axis=defn.axis, smoke=smoke,
-        seeds=list(seeds), cells=records,
+        seeds=list(seeds), cells=records, executor=executor,
         plan_cache_stats=cache.stats(),
         wall_clock_s=time.time() - t0)
     if out_dir is not None:

@@ -84,7 +84,7 @@ class SweepDef:
     fl_overrides: dict = dataclasses.field(default_factory=dict)
 
     def expand(self, smoke: bool = True, topology_seed: int = 0,
-               **overrides) -> list[SweepCell]:
+               executor: str = "host", **overrides) -> list[SweepCell]:
         """Expand to concrete cells.
 
         Args:
@@ -92,6 +92,9 @@ class SweepDef:
           topology_seed: control-plane seed stamped on every cell so
             diffusion plans are shareable across replicate seeds (see
             ``FLConfig.topology_seed``).
+          executor: data plane stamped on every cell — ``"host"`` (per-slot
+            reference loop) or ``"fleet"`` (client-stacked vmap); see
+            ``FLConfig.executor``.
           overrides: extra ``ExperimentSpec`` field overrides (e.g.
             ``num_samples=500`` for tests).
         """
@@ -107,7 +110,8 @@ class SweepDef:
             for strategy in strategies:
                 fl_kwargs: dict = dict(
                     strategy=strategy, rounds=rounds, num_clients=clients,
-                    num_models=clients, seed=0, topology_seed=topology_seed)
+                    num_models=clients, seed=0, topology_seed=topology_seed,
+                    executor=executor)
                 spec_kwargs: dict = dict(
                     task="fcn", alpha=1.0, num_samples=samples, data_seed=0)
                 fl_kwargs.update(self.fl_overrides)

@@ -19,7 +19,7 @@ __all__ = ["make_local_update", "local_update"]
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_step(loss_id: int, loss_fn: Callable, momentum: float,
+def _jitted_step(loss_fn: Callable, momentum: float,
                  clip: float | None):
     opt = opt_lib.sgd(momentum=momentum)
 
@@ -43,7 +43,7 @@ def make_local_update(loss_fn: Callable, momentum: float = 0.9,
     diffusion restarts SGD on the receiving PUE (the BS only ships model
     parameters, not optimizer state, over PUSCH).
     """
-    step = _jitted_step(id(loss_fn), loss_fn, momentum, clip)
+    step = _jitted_step(loss_fn, momentum, clip)
 
     def local_update(params: Params, batches: Iterable[dict], lr: float):
         mu = jax.tree.map(lambda p: jax.numpy.zeros_like(

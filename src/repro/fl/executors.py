@@ -1,0 +1,231 @@
+"""Executors: run one :class:`~repro.core.schedule.RoundSchedule` on params.
+
+Two data planes consume the same schedule object:
+
+* :class:`HostExecutor` — the reference semantics.  One parameter pytree per
+  client slot, local updates through ``repro.fl.client`` /
+  ``repro.fl.fedprox`` exactly as the original per-strategy loops did
+  (same per-client batch draws, same jitted step, same aggregation order),
+  so refactored strategies reproduce their pre-schedule trajectories.
+
+* :class:`FleetExecutor` — the client-stacked fast path.  All slots live on
+  one pytree with a leading client axis; a local "session" (one epoch of
+  batches, momentum restarted, per-slot gradient clipping) is a jitted
+  ``vmap`` over that axis, a diffusion hop is
+  :func:`~repro.distributed.fedshard.diffuse_params`, STC hops use
+  :func:`~repro.distributed.fedshard.masked_stc_compress`, and Eq.-11
+  aggregation is one weighted ``tensordot``.  Clients with shorter epochs
+  are padded and masked out per step, so the math per client matches the
+  host loop; the win is dispatch count — O(max-epoch) jitted calls per op
+  instead of O(Σ client batches) — which is what lets sweeps scale past
+  paper-sized fleets.
+
+Ledger charging lives in neither: :func:`~repro.core.schedule
+.charge_schedule` replays the schedule's wire events, so both executors
+report identical communication metrics by construction.
+"""
+from __future__ import annotations
+
+import copy
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.schedule import MixOp, PermuteOp, RoundSchedule, TrainOp
+from repro.distributed.fedshard import diffuse_params, masked_stc_compress
+from repro.fl.compression import stc_compress
+from repro.fl.schedulers import PROX_STRATEGIES
+from repro.train import optimizer as opt_lib
+
+Params = Any
+
+__all__ = ["HostExecutor", "FleetExecutor", "make_executor", "EXECUTORS"]
+
+EXECUTORS = ("host", "fleet")
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def _tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+class HostExecutor:
+    """Per-slot pytree-list execution — the bit-for-bit reference path."""
+
+    def __init__(self, local_update: Callable,
+                 client_batches: Sequence[Callable], cfg):
+        self.local_update = local_update
+        self.client_batches = client_batches
+        self.cfg = cfg
+
+    def _train(self, slots: list, mask: np.ndarray) -> None:
+        for c in np.flatnonzero(mask):
+            slots[c], _ = self.local_update(
+                slots[c], self.client_batches[c](), self.cfg.lr)
+
+    def run_round(self, sched: RoundSchedule, global_params: Params,
+                  slots: list | None) -> tuple[Params, list | None]:
+        c_slots = sched.num_slots
+        if not sched.persistent or slots is None:
+            slots = [copy.deepcopy(global_params) for _ in range(c_slots)]
+        ref = global_params
+        for op in sched.ops:
+            if isinstance(op, TrainOp):
+                self._train(slots, op.train_mask)
+            elif isinstance(op, PermuteOp):
+                if op.compress:
+                    for s in np.flatnonzero(op.compress_src_mask()):
+                        delta = stc_compress(_tree_sub(slots[s], ref),
+                                             sched.stc_sparsity)
+                        slots[s] = _tree_add(ref, delta)
+                slots = [slots[int(op.src_of_dst[c])] for c in range(c_slots)]
+                self._train(slots, op.train_mask)
+            elif isinstance(op, MixOp):
+                for members, weights in op.groups:
+                    avg = agg.fedavg([slots[i] for i in members],
+                                     list(weights))
+                    for i in members:
+                        slots[i] = avg
+            else:
+                raise TypeError(f"unknown op {type(op).__name__}")
+        weights = [w for _, w in sched.agg]
+        if sched.agg_mode == "stc_delta":
+            deltas = [stc_compress(_tree_sub(slots[s], ref),
+                                   sched.stc_sparsity) for s, _ in sched.agg]
+            new_global = _tree_add(ref, agg.fedavg(deltas, weights))
+        else:
+            new_global = agg.fedavg([slots[s] for s, _ in sched.agg], weights)
+        return new_global, (slots if sched.persistent else None)
+
+
+class FleetExecutor:
+    """Client-stacked execution: one pytree, leading client axis, jitted."""
+
+    def __init__(self, loss_fn: Callable,
+                 client_batches: Sequence[Callable], cfg,
+                 clip: float | None = 10.0):
+        self.loss_fn = loss_fn
+        self.client_batches = client_batches
+        self.cfg = cfg
+        self.prox = cfg.strategy in PROX_STRATEGIES
+        opt = opt_lib.sgd(momentum=cfg.momentum)
+        mu = float(cfg.prox_mu)
+
+        def one(p, mom, batch, active, anchor):
+            def obj(q):
+                loss = loss_fn(q, batch)
+                if self.prox:
+                    prox = sum(jnp.sum((a.astype(jnp.float32)
+                                        - b.astype(jnp.float32)) ** 2)
+                               for a, b in zip(jax.tree.leaves(q),
+                                               jax.tree.leaves(anchor)))
+                    loss = loss + 0.5 * mu * prox
+                return loss
+
+            loss, grads = jax.value_and_grad(obj)(p)
+            if clip is not None:
+                grads, _ = opt_lib.clip_by_global_norm(grads, clip)
+            updates, new_state = opt.update(grads, {"mu": mom}, p, cfg.lr)
+            p2 = opt_lib.apply_updates(p, updates)
+            sel = functools.partial(jnp.where, active)
+            return (jax.tree.map(sel, p2, p),
+                    jax.tree.map(sel, new_state["mu"], mom), loss)
+
+        self._step = jax.jit(jax.vmap(one))
+
+    # ---------------------------------------------------------------- batches
+
+    def _draw_session(self, mask: np.ndarray):
+        """Draw one local epoch per *masked* slot (preserving each client's
+        host-side batch stream), pad to the longest epoch, stack per step.
+
+        Returns ``(steps, actives)``: per padded step, a client-stacked batch
+        dict and the (C,) bool mask of slots genuinely training that step.
+        """
+        per_slot = [list(self.client_batches[c]()) if mask[c] else []
+                    for c in range(len(mask))]
+        nb = max((len(b) for b in per_slot), default=0)
+        if nb == 0:
+            return [], []
+        template = jax.tree.map(
+            np.zeros_like, next(b[0] for b in per_slot if b))
+        steps, actives = [], []
+        for k in range(nb):
+            rows = [b[k] if k < len(b) else template for b in per_slot]
+            steps.append(jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)), *rows))
+            actives.append(jnp.asarray(
+                np.array([k < len(b) for b in per_slot])))
+        return steps, actives
+
+    def _session(self, params: Params, mask: np.ndarray) -> Params:
+        """One local-update session at every masked slot (vmapped epoch)."""
+        if not mask.any():
+            return params
+        steps, actives = self._draw_session(mask)
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        anchor = params      # prox anchor = the received model (host default)
+        for batch, active in zip(steps, actives):
+            params, mom, _ = self._step(params, mom, batch, active, anchor)
+        return params
+
+    # ------------------------------------------------------------------ round
+
+    def run_round(self, sched: RoundSchedule, global_params: Params,
+                  slots: Params | None) -> tuple[Params, Params | None]:
+        c_slots = sched.num_slots
+        if sched.persistent and slots is not None:
+            params = slots
+        else:
+            params = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (c_slots,) + x.shape),
+                global_params)
+        ref = global_params
+        for op in sched.ops:
+            if isinstance(op, TrainOp):
+                params = self._session(params, op.train_mask)
+            elif isinstance(op, PermuteOp):
+                if op.compress:
+                    params = masked_stc_compress(
+                        params, ref, jnp.asarray(op.compress_src_mask()),
+                        sched.stc_sparsity)
+                params = diffuse_params(params,
+                                        jnp.asarray(op.src_of_dst))
+                params = self._session(params, op.train_mask)
+            elif isinstance(op, MixOp):
+                w = jnp.asarray(op.matrix(c_slots))
+                params = jax.tree.map(
+                    lambda x: jnp.einsum(
+                        "ij,j...->i...", w,
+                        x.astype(jnp.float32)).astype(x.dtype), params)
+            else:
+                raise TypeError(f"unknown op {type(op).__name__}")
+        wvec = sched.slot_weights()
+        w = jnp.asarray((wvec / wvec.sum()).astype(np.float32))
+        if sched.agg_mode == "stc_delta":
+            payload = masked_stc_compress(
+                params, ref, jnp.asarray(wvec > 0), sched.stc_sparsity)
+        else:
+            payload = params
+        new_global = jax.tree.map(
+            lambda x: jnp.tensordot(w, x.astype(jnp.float32),
+                                    axes=(0, 0)).astype(x.dtype), payload)
+        return new_global, (params if sched.persistent else None)
+
+
+def make_executor(name: str, loss_fn: Callable, local_update: Callable,
+                  client_batches: Sequence[Callable], cfg):
+    """Build the executor selected by ``FLConfig.executor``."""
+    if name == "host":
+        return HostExecutor(local_update, client_batches, cfg)
+    if name == "fleet":
+        return FleetExecutor(loss_fn, client_batches, cfg)
+    raise ValueError(f"unknown executor {name!r}; expected one of "
+                     f"{EXECUTORS}")

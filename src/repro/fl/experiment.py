@@ -39,6 +39,9 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
     to the FL runtime; combined with ``spec.fl.topology_seed`` it lets the
     sweep orchestrator replay host-side diffusion plans across replicate
     seeds instead of re-running the auction loop per seed.
+    ``spec.fl.executor`` selects the data plane (``"host"`` per-slot
+    reference loop or ``"fleet"`` client-stacked vmap) — schedules and
+    ledger charges are identical either way.
     """
     rng = np.random.default_rng(spec.data_seed)
     ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,

@@ -14,8 +14,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
-
 Array = jax.Array
 Params = Any
 

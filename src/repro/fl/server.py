@@ -6,25 +6,30 @@ D-PSGD-style gossip (fully decentralized; Appendix C Scenario 1), and a
 feasible neighbours, isolating FedDif's *planning* gain from its *mobility*
 gain on Table II's strategy axis).
 
-The strategy seam
------------------
-``run_federated`` is the single entry point; ``cfg.strategy`` selects a
-per-communication-round function ``_round_<name>``.  Every round function
-receives the same ingredients — the current global (or persistent per-client)
-params, a ``local_update`` closure, per-client batch thunks, the Dirichlet
-partition's DSI/data-size arrays, the wireless draw of the round
-(positions + uplink spectral efficiencies), and the shared
-:class:`ResourceLedger` — and returns the next global params plus its
-strategy-specific diffusion/IID bookkeeping.  Adding a strategy therefore
-means: append its name to :data:`STRATEGIES`, write one ``_round_*``
-function, and dispatch it in the round loop; the experiment harness
-(``repro.fl.experiment``), the sweep registry (``repro.experiments``) and the
-benchmarks pick it up by name with no further plumbing.
+The RoundSchedule / Executor seam
+---------------------------------
+``run_federated`` is the single entry point.  Each communication round runs
+in three strategy-agnostic stages, mirroring the paper's PUCCH/PUSCH split:
+
+1. **schedule** — ``repro.fl.schedulers.SCHEDULERS[cfg.strategy]`` turns the
+   round's control-plane inputs (partition DSIs, wireless draw, QoS knobs)
+   into a pure :class:`~repro.core.schedule.RoundSchedule`: slot-level
+   train/permute/mix ops, wire events, aggregation weights.   [PUCCH]
+2. **charge** — :func:`~repro.core.schedule.charge_schedule` replays the wire
+   events into the :class:`ResourceLedger` (Sec. III-D metrics), identically
+   for every executor.
+3. **execute** — the executor selected by ``cfg.executor`` runs the ops:
+   ``"host"`` on a per-slot pytree list (the reference semantics), ``"fleet"``
+   on one client-stacked pytree via vmapped/jitted fedshard steps. [PUSCH]
+
+Adding a strategy therefore means: append its name to :data:`STRATEGIES` and
+write one scheduler in ``repro.fl.schedulers`` — both executors, the ledger,
+the experiment harness (``repro.fl.experiment``), the sweep registry
+(``repro.experiments``) and the benchmarks pick it up by name with no
+further plumbing.
 
 The runtime is model-agnostic: pass any ``loss_fn(params, batch)`` +
-``init_fn(key)`` + per-client batch iterators.  Communication is charged to a
-:class:`ResourceLedger` through the simulated wireless channel (Sec. III-D),
-reproducing the paper's sub-frame / transmitted-model metrics.
+``init_fn(key)`` + per-client batch iterators.
 
 Control-plane determinism: when ``cfg.topology_seed`` is set, each round's
 positions / channel draws come from a fresh ``default_rng([topology_seed, t])``
@@ -35,7 +40,6 @@ once per sweep cell and replay the plan across replicate seeds.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 from typing import Any, Callable, Sequence
 
@@ -47,14 +51,15 @@ from repro.channels.resources import ResourceLedger, spectral_efficiency
 from repro.channels.topology import CellTopology
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
-from repro.core.diffusion import DiffusionPlanner, PlanCache, plan_cache_key
-from repro.core.dol import DiffusionState, iid_distance
+from repro.core.diffusion import DiffusionPlanner, PlanCache
+from repro.core.schedule import charge_schedule
 from repro.fl.client import make_local_update
-from repro.fl.compression import compressed_bits, stc_compress
+from repro.fl.executors import EXECUTORS, make_executor
+from repro.fl.schedulers import PROX_STRATEGIES, SCHEDULERS, RoundContext
 
 Params = Any
 
-__all__ = ["FLConfig", "FLResult", "run_federated"]
+__all__ = ["FLConfig", "FLResult", "run_federated", "STRATEGIES"]
 
 STRATEGIES = ("feddif", "fedavg", "fedswap", "stc", "tthf", "gossip",
               "feddif_stc", "fedprox", "feddif_prox", "d2d_random_walk")
@@ -84,6 +89,7 @@ class FLConfig:
     random_walk_hops: int = 3          # hops/round for d2d_random_walk
     max_diffusion_rounds: int | None = None
     eval_every: int = 1
+    executor: str = "host"           # "host" (reference) | "fleet" (stacked)
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
     underlay: bool = False           # Appendix C-F (D2D reuses CUE PRBs)
 
@@ -128,13 +134,21 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         batches.
       dsi / data_sizes: from the Dirichlet partitioner.
       eval_fn: params -> (accuracy, loss) on held-out data.
-      cfg: experiment configuration.
+      cfg: experiment configuration; ``cfg.executor`` selects the data plane
+        (``"host"`` reference loop or ``"fleet"`` client-stacked vmap).
       plan_cache: optional :class:`PlanCache` for FedDif strategies; only
         consulted when ``cfg.topology_seed`` is set (otherwise the wireless
         draw depends on ``cfg.seed`` and plans are not shareable).
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
-    n, m = cfg.num_clients, cfg.num_models
+    assert cfg.executor in EXECUTORS, cfg.executor
+    if cfg.num_models > cfg.num_clients:
+        # The paper trains M ≤ N models (one PUE trains one model per round,
+        # constraint 18d); the slot-per-client executors require it too.
+        raise ValueError(
+            f"num_models={cfg.num_models} > num_clients={cfg.num_clients}; "
+            f"FedDif requires M ≤ N (set num_models <= num_clients)")
+    n = cfg.num_clients
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     topology = CellTopology(num_pues=n)
@@ -145,13 +159,15 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                                epsilon=cfg.epsilon,
                                max_rounds=cfg.max_diffusion_rounds,
                                underlay=cfg.underlay)
-    if cfg.strategy in ("fedprox", "feddif_prox"):
+    if cfg.strategy in PROX_STRATEGIES:
         # proximal local solver (anchor = the received model's weights)
         from repro.fl.fedprox import make_prox_local_update
         local_update = make_prox_local_update(loss_fn, cfg.prox_mu,
                                               cfg.momentum)
     else:
         local_update = make_local_update(loss_fn, cfg.momentum)
+    executor = make_executor(cfg.executor, loss_fn, local_update,
+                             client_batches, cfg)
     ledger = ResourceLedger()
 
     global_params = init_fn(key)
@@ -159,10 +175,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     auction.model_bits = model_bits
 
     acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
-
-    # gossip / tthf keep per-client params persistently
-    persistent = ([copy.deepcopy(global_params) for _ in range(n)]
-                  if cfg.strategy in ("gossip", "tthf") else None)
+    slots = None            # persistent per-slot state (gossip / tthf)
 
     for t in range(cfg.rounds):
         # Control-plane stream: per-round and model-seed-independent when
@@ -174,60 +187,18 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         pos = topology.sample_positions(ctrl_rng, n)
         up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng), 0.05)
 
-        if cfg.strategy in ("feddif", "feddif_stc", "feddif_prox"):
-            cache_key = None
-            if plan_cache is not None and cfg.topology_seed is not None:
-                cache_key = plan_cache_key(
-                    cfg.topology_seed, t, dsi, data_sizes, cfg.epsilon,
-                    cfg.gamma_min, cfg.metric,
-                    extra=(n, m, model_bits, cfg.max_diffusion_rounds,
-                           cfg.allow_retraining, cfg.underlay))
-            k_rounds, iid_now = _round_feddif(
-                global_params, local_update, client_batches, dsi, data_sizes,
-                planner, ledger, model_bits, pos, ctrl_rng, cfg, up_gamma,
-                plan_cache=plan_cache, cache_key=cache_key)
-            global_params = k_rounds.pop("agg")
-            dif_hist.append(k_rounds["rounds"])
-            iid_hist.append(iid_now)
-        elif cfg.strategy in ("fedavg", "fedprox"):
-            global_params = _round_fedavg(
-                global_params, local_update, client_batches, data_sizes,
-                ledger, model_bits, up_gamma, cfg)
-            dif_hist.append(0)
-            iid_hist.append(float(np.mean(iid_distance(
-                np.asarray(dsi), cfg.metric))))
-        elif cfg.strategy == "stc":
-            global_params = _round_stc(
-                global_params, local_update, client_batches, data_sizes,
-                ledger, up_gamma, cfg)
-            dif_hist.append(0)
-            iid_hist.append(float(np.mean(iid_distance(
-                np.asarray(dsi), cfg.metric))))
-        elif cfg.strategy == "fedswap":
-            global_params, k_sw = _round_fedswap(
-                global_params, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma)
-            dif_hist.append(k_sw)
-            iid_hist.append(0.0)
-        elif cfg.strategy == "tthf":
-            global_params = _round_tthf(
-                persistent, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma, t)
-            dif_hist.append(0)
-            iid_hist.append(0.0)
-        elif cfg.strategy == "gossip":
-            persistent = _round_gossip(
-                persistent, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, ctrl_rng, channel, cfg)
-            global_params = agg.fedavg(persistent, list(data_sizes))
-            dif_hist.append(1)
-            iid_hist.append(0.0)
-        elif cfg.strategy == "d2d_random_walk":
-            global_params, k_walk, iid_now = _round_d2d_random_walk(
-                global_params, local_update, client_batches, dsi, data_sizes,
-                ledger, model_bits, pos, ctrl_rng, channel, cfg, up_gamma)
-            dif_hist.append(k_walk)
-            iid_hist.append(iid_now)
+        ctx = RoundContext(cfg=cfg, t=t, dsi=dsi, data_sizes=data_sizes,
+                           pos=pos, rng=ctrl_rng, up_gamma=up_gamma,
+                           topology=topology, channel=channel,
+                           planner=planner, model_bits=model_bits,
+                           param_template=global_params,
+                           plan_cache=plan_cache)
+        schedule = SCHEDULERS[cfg.strategy](ctx)
+        charge_schedule(ledger, schedule)
+        global_params, slots = executor.run_round(schedule, global_params,
+                                                  slots)
+        dif_hist.append(schedule.diffusion_rounds)
+        iid_hist.append(schedule.mean_iid)
 
         if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
             a, l = eval_fn(global_params)
@@ -237,234 +208,3 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
                     diffusion_rounds=dif_hist, iid_distance=iid_hist,
                     config=cfg, final_params=global_params)
-
-
-# ------------------------------------------------------------------ rounds
-
-def _round_feddif(global_params, local_update, client_batches, dsi,
-                  data_sizes, planner: DiffusionPlanner,
-                  ledger: ResourceLedger, model_bits, pos, rng, cfg,
-                  up_gamma, plan_cache: PlanCache | None = None,
-                  cache_key: tuple | None = None):
-    n, m = cfg.num_clients, cfg.num_models
-    # BS clones the global model to M local models and broadcasts.
-    models = [copy.deepcopy(global_params) for _ in range(m)]
-    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
-    state = DiffusionState.init(m, n, dsi.shape[1])
-
-    # Initial training by the initial holders (Algorithm 2 lines 9–13).
-    for mi in range(m):
-        holder = int(state.holder[mi])
-        models[mi], _ = local_update(models[mi], client_batches[holder](),
-                                     cfg.lr)
-        state.record_training(mi, holder, dsi[holder],
-                              float(data_sizes[holder]))
-
-    # Diffusion rounds (plan + execute).  The cache key (when given) captures
-    # every plan input, so a hit replays the stored plan and post-state.
-    plan = planner.plan_communication_round(state, dsi, data_sizes, rng,
-                                            positions=pos, cache=plan_cache,
-                                            cache_key=cache_key)
-    for k in range(plan.num_rounds):
-        for hop in plan.hops_in_round(k):
-            bits = model_bits
-            if cfg.strategy == "feddif_stc":
-                # STC compresses the hop's DELTA against the round-start
-                # global model (which every PUE holds from the broadcast);
-                # the receiver reconstructs global + ternarized delta.
-                delta = jax.tree.map(lambda a, b: a - b,
-                                     models[hop.model], global_params)
-                cdelta = stc_compress(delta, cfg.stc_sparsity)
-                models[hop.model] = jax.tree.map(lambda g, d: g + d,
-                                                 global_params, cdelta)
-                bits = compressed_bits(delta, cfg.stc_sparsity)
-            ledger.charge_d2d(bits, max(hop.gamma, 0.05))
-            models[hop.model], _ = local_update(
-                models[hop.model], client_batches[hop.dst](), cfg.lr)
-
-    # Uplink + aggregation (Eq. 11), weighted by chain data size.
-    for mi in range(m):
-        holder = int(state.holder[mi])
-        ledger.charge_uplink(model_bits, float(up_gamma[holder]))
-    weights = [float(state.chain_size[mi]) for mi in range(m)]
-    out = agg.fedavg(models, weights)
-    return {"agg": out, "rounds": plan.num_rounds}, \
-        float(np.mean(plan.final_iid_distance))
-
-
-def _round_fedavg(global_params, local_update, client_batches, data_sizes,
-                  ledger, model_bits, up_gamma, cfg):
-    n = cfg.num_clients
-    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
-    locals_ = []
-    for i in range(n):
-        p, _ = local_update(copy.deepcopy(global_params),
-                            client_batches[i](), cfg.lr)
-        locals_.append(p)
-        ledger.charge_uplink(model_bits, float(up_gamma[i]))
-    return agg.fedavg(locals_, list(data_sizes))
-
-
-def _round_stc(global_params, local_update, client_batches, data_sizes,
-               ledger, up_gamma, cfg):
-    n = cfg.num_clients
-    full_bits = agg.model_bits(global_params, cfg.bits_per_param)
-    ledger.charge_downlink(full_bits, float(np.median(up_gamma)), n)
-    deltas = []
-    for i in range(n):
-        p, _ = local_update(copy.deepcopy(global_params),
-                            client_batches[i](), cfg.lr)
-        delta = jax.tree.map(lambda a, b: a - b, p, global_params)
-        cdelta = stc_compress(delta, cfg.stc_sparsity)
-        deltas.append(cdelta)
-        ledger.charge_uplink(compressed_bits(delta, cfg.stc_sparsity),
-                             float(up_gamma[i]))
-    mean_delta = agg.fedavg(deltas, list(data_sizes))
-    return jax.tree.map(lambda g, d: g + d, global_params, mean_delta)
-
-
-def _round_fedswap(global_params, local_update, client_batches, data_sizes,
-                   ledger, model_bits, pos, rng, channel, cfg, up_gamma):
-    """FedSwap [21]: every round, models do a random full swap across all
-    PUEs until each model visited every client (full diffusion)."""
-    n = cfg.num_clients
-    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
-    models = [copy.deepcopy(global_params) for _ in range(n)]
-    holder = np.arange(n)
-    dist = CellTopology(num_pues=n).pairwise_distances(pos)
-    visited = np.eye(n, dtype=bool)
-    for mi in range(n):
-        models[mi], _ = local_update(models[mi], client_batches[mi](),
-                                     cfg.lr)
-    swaps = 0
-    while not visited.all():
-        perm = rng.permutation(n)
-        gains = channel.sample_gains(dist, rng)
-        gamma = spectral_efficiency(channel.snr(gains))
-        for mi in range(n):
-            src, dst = int(holder[mi]), int(perm[mi])
-            if src == dst:
-                continue
-            ledger.charge_d2d(model_bits, max(float(gamma[src, dst]), 0.05))
-            holder[mi] = dst
-            if not visited[mi, dst]:
-                models[mi], _ = local_update(models[mi],
-                                             client_batches[dst](), cfg.lr)
-                visited[mi, dst] = True
-        swaps += 1
-        if swaps > 4 * n:
-            break
-    for mi in range(n):
-        ledger.charge_uplink(model_bits, float(up_gamma[int(holder[mi])]))
-    return agg.fedavg(models, list(data_sizes)), swaps
-
-
-def _round_d2d_random_walk(global_params, local_update, client_batches, dsi,
-                           data_sizes, ledger, model_bits, pos, rng, channel,
-                           cfg, up_gamma):
-    """Auction-free diffusion baseline (Table II's third D2D point).
-
-    Models take ``cfg.random_walk_hops`` random D2D hops per communication
-    round: each hop moves a model to a uniformly random unvisited neighbour
-    whose link clears γ_min, and the receiver trains it.  Same mobility
-    pattern as FedDif, zero planning — the accuracy/bandwidth gap to FedDif
-    measures what the auction itself buys.
-    """
-    n, m = cfg.num_clients, cfg.num_models
-    ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
-    models = [copy.deepcopy(global_params) for _ in range(m)]
-    holder = np.arange(m) % n
-    visited = np.zeros((m, n), dtype=bool)
-    for mi in range(m):
-        h = int(holder[mi])
-        models[mi], _ = local_update(models[mi], client_batches[h](), cfg.lr)
-        visited[mi, h] = True
-    dist = CellTopology(num_pues=n).pairwise_distances(pos)
-    hops_done = 0
-    for _ in range(cfg.random_walk_hops):
-        gains = channel.sample_gains(dist, rng)
-        gamma = spectral_efficiency(channel.snr(gains))
-        moved = False
-        for mi in range(m):
-            src = int(holder[mi])
-            cand = [j for j in range(n)
-                    if j != src and not visited[mi, j]
-                    and gamma[src, j] >= cfg.gamma_min]
-            if not cand:
-                continue
-            dst = int(rng.choice(cand))
-            ledger.charge_d2d(model_bits, max(float(gamma[src, dst]), 0.05))
-            models[mi], _ = local_update(models[mi], client_batches[dst](),
-                                         cfg.lr)
-            holder[mi] = dst
-            visited[mi, dst] = True
-            moved = True
-        if not moved:
-            break
-        hops_done += 1
-    for mi in range(m):
-        ledger.charge_uplink(model_bits, float(up_gamma[int(holder[mi])]))
-    # Chain weights and DoL follow Eq. (2): each model's mixture of the DSIs
-    # it visited, weighted by client data size.
-    chain_sizes = visited @ np.asarray(data_sizes, np.float64)
-    dol = (visited * np.asarray(data_sizes)[None, :]) @ np.asarray(dsi)
-    dol = dol / np.maximum(chain_sizes[:, None], 1e-9)
-    mean_iid = float(np.mean(np.asarray(iid_distance(dol, cfg.metric))))
-    out = agg.fedavg(models, [float(w) for w in chain_sizes])
-    return out, hops_done, mean_iid
-
-
-def _round_tthf(params, local_update, client_batches, data_sizes,
-                ledger, model_bits, pos, rng, channel, cfg, up_gamma, t):
-    """TT-HF-like [22]: local updates + intra-cluster D2D averaging each
-    round; global aggregation only every ``tthf_global_period`` rounds.
-    ``params`` is the persistent per-client parameter list (mutated)."""
-    n = cfg.num_clients
-    cs = cfg.tthf_cluster_size
-    clusters = [list(range(i, min(i + cs, n))) for i in range(0, n, cs)]
-    dist = CellTopology(num_pues=n).pairwise_distances(pos)
-    gains = channel.sample_gains(dist, rng)
-    gamma = spectral_efficiency(channel.snr(gains))
-    for i in range(n):
-        params[i], _ = local_update(params[i], client_batches[i](), cfg.lr)
-    # intra-cluster consensus averaging (each member sends to a head)
-    for cl in clusters:
-        head = cl[0]
-        for i in cl[1:]:
-            ledger.charge_d2d(model_bits, max(float(gamma[i, head]), 0.05))
-        avg = agg.fedavg([params[i] for i in cl],
-                         [float(data_sizes[i]) for i in cl])
-        for i in cl:
-            params[i] = copy.deepcopy(avg)
-    if (t + 1) % cfg.tthf_global_period == 0:
-        for cl in clusters:
-            ledger.charge_uplink(model_bits, float(up_gamma[cl[0]]))
-        ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
-        g = agg.fedavg(params, list(data_sizes))
-        for i in range(n):
-            params[i] = copy.deepcopy(g)
-        return g
-    return agg.fedavg(params, list(data_sizes))
-
-
-def _round_gossip(gossip_params, local_update, client_batches, data_sizes,
-                  ledger, model_bits, pos, rng, channel, cfg):
-    """D-PSGD-style gossip: train locally, then average with one random
-    neighbor over D2D (fully decentralized — no BS)."""
-    n = cfg.num_clients
-    dist = CellTopology(num_pues=n).pairwise_distances(pos)
-    gains = channel.sample_gains(dist, rng)
-    gamma = spectral_efficiency(channel.snr(gains))
-    for i in range(n):
-        gossip_params[i], _ = local_update(gossip_params[i],
-                                           client_batches[i](), cfg.lr)
-    perm = rng.permutation(n)
-    for a in range(0, n - 1, 2):
-        i, j = int(perm[a]), int(perm[a + 1])
-        ledger.charge_d2d(model_bits, max(float(gamma[i, j]), 0.05))
-        ledger.charge_d2d(model_bits, max(float(gamma[j, i]), 0.05))
-        avg = agg.fedavg([gossip_params[i], gossip_params[j]],
-                         [float(data_sizes[i]), float(data_sizes[j])])
-        gossip_params[i] = copy.deepcopy(avg)
-        gossip_params[j] = copy.deepcopy(avg)
-    return gossip_params

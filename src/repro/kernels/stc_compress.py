@@ -21,7 +21,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["stc_reduce_pallas", "stc_apply_pallas"]
 

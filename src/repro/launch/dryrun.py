@@ -25,7 +25,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ARCH_IDS, SHAPES, ModelConfig, ShapeConfig, get_config
 from repro.distributed import sharding as sh

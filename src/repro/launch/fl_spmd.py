@@ -1,16 +1,15 @@
-"""SPMD FedDif runtime: the paper's Algorithm 2 with the data plane jitted.
+"""SPMD FedDif runtime — a thin CLI over the RoundSchedule/Executor layer.
 
-Bridges the host control plane (``repro.core.diffusion.DiffusionPlanner`` —
-auctions, DoL bookkeeping, wireless ledger) and the SPMD data plane
-(``repro.distributed.fedshard`` — client-stacked fleet training, diffusion
-permutation, weighted aggregation) into one driver:
-
-  per communication round t:
-    1. host: plan all diffusion rounds (auction; Algorithm 1)      [PUCCH]
-    2. device: initial fleet local update (vmapped train step)
-    3. device: per diffusion round k — permute params across the
-       client axis with the plan's bijection, train at winners      [PUSCH]
-    4. device: data-size-weighted aggregation (Eq. 11) + broadcast
+The FedDif *scheduler* (``repro.fl.schedulers.schedule_feddif``) plans each
+communication round on host — auctions, DoL bookkeeping, wire accounting
+[PUCCH] — and this driver replays the resulting
+:class:`~repro.core.schedule.RoundSchedule` on an LM fleet with
+``repro.distributed.fedshard``'s jitted data plane: vmapped local update per
+``TrainOp``, collective-permute + masked train per ``PermuteOp``, Eq.-11
+weighted aggregation from the schedule's chain weights [PUSCH].  The ledger
+is charged by :func:`~repro.core.schedule.charge_schedule` — the same
+function the host simulator uses, so fleet runs report the same Table-II
+metrics.
 
 On a pod, the client axis is a real mesh axis (``data`` on-pod for
 paper-scale fleets, ``pod`` across pods — see fedshard); on this CPU host
@@ -27,14 +26,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.channels.fading import ChannelModel
+from repro.channels.resources import ResourceLedger
+from repro.channels.topology import CellTopology
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import aggregation as agg
+from repro.core.auction import AuctionConfig
 from repro.core.diffusion import DiffusionPlanner
-from repro.core.dol import DiffusionState
+from repro.core.schedule import PermuteOp, TrainOp, charge_schedule
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import class_labels_for_lm, lm_corpus
 from repro.distributed.fedshard import (fleet_aggregate,
                                         make_diffusion_step,
                                         make_fleet_train_step)
+from repro.fl.schedulers import RoundContext, schedule_feddif
+from repro.fl.server import FLConfig, _uplink_gamma
 from repro.models import build_model
 from repro.train import optimizer as opt_lib
 from repro.train.trainstep import TrainState
@@ -84,39 +90,50 @@ def run_spmd_feddif(arch: str = "smollm_360m", clients: int = 4,
     diff_step = jax.jit(make_diffusion_step(model, opt, lr, remat=False))
     aggregate = jax.jit(fleet_aggregate)
 
-    planner = DiffusionPlanner(epsilon=epsilon)
+    # --- host control plane (shared with the FL simulator) ----------
+    fl_cfg = FLConfig(strategy="feddif", num_clients=clients,
+                      num_models=clients, rounds=rounds, lr=lr,
+                      epsilon=epsilon, seed=seed)
+    topology = CellTopology(num_pues=clients)
+    channel = ChannelModel()
+    auction = AuctionConfig(gamma_min=fl_cfg.gamma_min)
+    planner = DiffusionPlanner(topology, channel, auction, epsilon=epsilon)
     state = _stack_states(model, opt, key, clients)
-    weights = jnp.asarray(part.data_sizes, jnp.float32)
+    model_bits = agg.model_bits(state.params)
+    auction.model_bits = model_bits
+    ledger = ResourceLedger()
     history = []
 
     for t in range(rounds):
         t0 = time.time()
-        # host control plane: plan the whole communication round
-        dstate = DiffusionState.init(clients, clients, part.dsi.shape[1])
-        for m in range(clients):
-            dstate.record_training(m, m, part.dsi[m],
-                                   float(part.data_sizes[m]))
-        plan = planner.plan_communication_round(
-            dstate, part.dsi, part.data_sizes, rng)
-        perms = plan.as_permutations(clients)
+        pos = topology.sample_positions(rng, clients)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, rng), 0.05)
+        ctx = RoundContext(cfg=fl_cfg, t=t, dsi=part.dsi,
+                           data_sizes=part.data_sizes, pos=pos, rng=rng,
+                           up_gamma=up_gamma, topology=topology,
+                           channel=channel, planner=planner,
+                           model_bits=model_bits, param_template=None)
+        schedule = schedule_feddif(ctx)
+        charge_schedule(ledger, schedule)
 
-        # device data plane: initial local update ...
-        state, metrics = fleet_step(state, fleet_batch())
-        # ... diffusion rounds ...
-        for perm, mask in perms:
-            # planner emits dst-of-src; the gather needs src-of-dst
-            src_of_dst = np.argsort(perm)
-            state, metrics = diff_step(state, fleet_batch(),
-                                       jnp.asarray(src_of_dst),
-                                       jnp.asarray(mask), None)
-        # ... and Eq.-11 aggregation + broadcast.
+        metrics = {"loss": jnp.zeros((clients,))}
+        for op in schedule.ops:
+            if isinstance(op, TrainOp):          # initial fleet update
+                state, metrics = fleet_step(state, fleet_batch())
+            elif isinstance(op, PermuteOp):      # one diffusion round
+                state, metrics = diff_step(state, fleet_batch(),
+                                           jnp.asarray(op.src_of_dst),
+                                           jnp.asarray(op.train_mask), None)
+        # Eq.-11 aggregation + broadcast, chain-data-size weighted.
+        weights = jnp.asarray(schedule.slot_weights(), jnp.float32)
         state = TrainState(params=aggregate(state.params, weights),
                            opt_state=state.opt_state, step=state.step)
         loss = float(jnp.mean(metrics["loss"]))
         history.append(loss)
-        log(f"round {t + 1}: diffusion_rounds={plan.num_rounds} "
+        log(f"round {t + 1}: diffusion_rounds={schedule.diffusion_rounds} "
             f"mean_client_loss={loss:.4f} "
-            f"final_iid={float(np.mean(plan.final_iid_distance)):.4f} "
+            f"final_iid={schedule.mean_iid:.4f} "
+            f"subframes={ledger.subframes} "
             f"({time.time() - t0:.1f}s)")
     return state, history
 

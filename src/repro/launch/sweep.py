@@ -38,6 +38,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="number of replicate seeds (0..N-1)")
     ap.add_argument("--engine", choices=["auto", "seed_vmap", "loop"],
                     default="auto")
+    ap.add_argument("--executor", choices=["host", "fleet"], default="host",
+                    help="data plane per cell: host reference loop or "
+                         "client-stacked fleet (FLConfig.executor)")
     ap.add_argument("--out-dir", default=".",
                     help="artifact directory (default: CWD)")
     ap.add_argument("--list", action="store_true",
@@ -66,6 +69,7 @@ def main(argv: list[str] | None = None) -> int:
               f"seeds={list(seeds)}) ===", flush=True)
         artifact = run_sweep(name, smoke=smoke, seeds=seeds,
                              out_dir=args.out_dir, engine=args.engine,
+                             executor=args.executor,
                              log=lambda s: print(s, flush=True))
         pc = artifact["plan_cache"]
         print(f"# wrote {artifact['path']} "

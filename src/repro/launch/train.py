@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import aggregation as agg
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import class_labels_for_lm, lm_corpus
 from repro.fl.server import FLConfig, run_federated

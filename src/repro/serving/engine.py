@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

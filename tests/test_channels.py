@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.channels import (ChannelModel, ChannelParams, CellTopology,
+from repro.channels import (ChannelModel, CellTopology,
                             ResourceLedger, outage_probability,
                             required_bandwidth, spectral_efficiency)
 

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import (DiffusionPlanner, DiffusionState, iid_distance)
-from repro.core.auction import AuctionConfig
 
 
 def _plan(seed=0, n=10, m=10, c=10, alpha=0.5, epsilon=0.04):

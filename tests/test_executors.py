@@ -1,0 +1,117 @@
+"""RoundSchedule / Executor seam: host and fleet data planes must agree.
+
+The schedule is computed once per round from the control plane, so the
+ledger totals are *identical* by construction (both executors replay the
+same wire events); the trained parameters must agree to vmap-vs-loop float
+tolerance.  Every Table-II strategy must run end-to-end on both executors.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule,
+                                 WireEvent, charge_schedule,
+                                 complete_round_permutation)
+from repro.channels.resources import ResourceLedger
+from repro.fl import ExperimentSpec, FLConfig, run_experiment
+from repro.fl.server import STRATEGIES
+
+
+def _spec(strategy, executor, rounds=2, clients=5, **kw):
+    return ExperimentSpec(
+        task="fcn", alpha=0.3, num_samples=1200,
+        fl=FLConfig(strategy=strategy, rounds=rounds, num_clients=clients,
+                    num_models=clients, seed=0, topology_seed=3,
+                    executor=executor, tthf_cluster_size=2,
+                    tthf_global_period=2, **kw))
+
+
+# ------------------------------------------------------------------ schedule
+
+def test_complete_round_permutation_bijects_and_parks():
+    # 3 slots; model 0 at slot 0 hops to slot 1 (occupied by model 1).
+    src_of_dst, mask, slots = complete_round_permutation(
+        [(0, 1)], np.array([0, 1, 2]), 3)
+    assert sorted(src_of_dst.tolist()) == [0, 1, 2]
+    assert mask.tolist() == [False, True, False]
+    assert slots[0] == 1                      # scheduled hop
+    assert sorted(slots.tolist()) == [0, 1, 2]  # one model per slot
+
+
+def test_charge_schedule_replays_every_event_kind():
+    led = ResourceLedger()
+    sched = RoundSchedule(
+        num_slots=2, ops=[],
+        wire=[WireEvent("downlink", 1e6, 2.0, 2),
+              WireEvent("d2d", 1e6, 1.0),
+              WireEvent("uplink", 5e5, 2.0)],
+        agg=[(0, 1.0), (1, 1.0)])
+    charge_schedule(led, sched)
+    assert led.downlink_models == 1
+    assert led.uplink_models == 1
+    assert led.transmitted_models == 2        # d2d + uplink
+    assert led.subframes > 0
+    with pytest.raises(ValueError):
+        charge_schedule(led, dataclasses.replace(
+            sched, wire=[WireEvent("sideways", 1.0, 1.0)]))
+
+
+def test_mixop_matrix_is_row_stochastic():
+    op = MixOp((((0, 2), (3.0, 1.0)),))
+    w = op.matrix(4)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w[0], [0.75, 0.0, 0.25, 0.0])
+    np.testing.assert_allclose(w[1], [0.0, 1.0, 0.0, 0.0])
+
+
+def test_permuteop_compress_src_mask():
+    op = PermuteOp(np.array([2, 0, 1]), np.array([True, False, True]),
+                   compress=True)
+    # trained dsts 0 and 2 receive from slots 2 and 1.
+    assert op.compress_src_mask().tolist() == [False, True, True]
+
+
+# ----------------------------------------------------- host vs fleet parity
+
+@pytest.mark.parametrize("strategy", ["feddif", "fedavg", "fedswap"])
+def test_host_fleet_parity(strategy):
+    """Same seed + config: final params allclose, ledgers identical."""
+    host = run_experiment(_spec(strategy, "host"))
+    fleet = run_experiment(_spec(strategy, "fleet"))
+    assert host.ledger.as_dict() == fleet.ledger.as_dict()
+    assert host.diffusion_rounds == fleet.diffusion_rounds
+    np.testing.assert_allclose(host.iid_distance, fleet.iid_distance,
+                               atol=1e-6)
+    for a, b in zip(jax.tree.leaves(host.final_params),
+                    jax.tree.leaves(fleet.final_params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(host.accuracy, fleet.accuracy, atol=0.05)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_every_strategy_runs_on_fleet_executor(strategy):
+    """All 10 Table-II strategies execute on the client-stacked data plane."""
+    res = run_experiment(_spec(strategy, "fleet", rounds=1, clients=4))
+    assert len(res.accuracy) == 1
+    assert 0.0 <= res.accuracy[0] <= 1.0
+    assert np.all(np.isfinite(
+        np.concatenate([np.asarray(x, np.float32).ravel()
+                        for x in jax.tree.leaves(res.final_params)])))
+
+
+def test_fleet_rejects_unknown_executor():
+    with pytest.raises(AssertionError):
+        run_experiment(_spec("fedavg", "warp"))
+
+
+def test_rejects_more_models_than_clients():
+    """M ≤ N (constraint 18d): a clear error, not a slot-invariant crash."""
+    spec = _spec("feddif", "host", clients=4)
+    spec = dataclasses.replace(
+        spec, fl=dataclasses.replace(spec.fl, num_models=8))
+    with pytest.raises(ValueError, match="num_models"):
+        run_experiment(spec)

@@ -187,9 +187,15 @@ def test_smallest_sweep_end_to_end_writes_valid_artifact(tmp_path):
     assert on_disk["plan_cache"]["misses"] >= 1
     assert len(on_disk["cells"]) == len(REGISTRY["fig5_gamma_min"]
                                         .smoke_values)
+    assert on_disk["executor"] == "host"
     for c in on_disk["cells"]:
         assert c["accuracy"] and c["accuracy"][0], "per-seed accuracy curve"
         assert c["summary"]["peak_mean"] is not None
         assert c["comm"]["subframes"] > 0
         assert "pusch_bandwidth_hz_s" in c["comm"]
         assert c["wall_clock_s"] >= 0
+        assert c["executor"] == "host"
+        # per-cell plan-cache delta (sweep cache efficacy trajectory)
+        pc = c["plan_cache"]
+        assert set(pc) == {"hits", "misses", "entries"}
+        assert pc["hits"] + pc["misses"] >= 1

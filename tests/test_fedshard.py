@@ -3,12 +3,10 @@ the host-side reference semantics (move → selective train → aggregate)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.distributed.fedshard import (diffuse_params, fleet_aggregate,
-                                        make_diffusion_step,
-                                        make_fleet_train_step)
+                                        make_diffusion_step)
 from repro.models import build_model
 from repro.train import optimizer as opt_lib
 from repro.train.trainstep import TrainState, make_train_step

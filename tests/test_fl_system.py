@@ -1,8 +1,6 @@
 """FL system integration: strategies run end-to-end; FedDif beats FedAvg
 under non-IID; STC compresses; ledger orderings match the paper's Table II
 qualitative structure.  Sizes are kept tiny for CI speed."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +8,7 @@ import pytest
 
 from repro.core import aggregation as agg
 from repro.data.partitioner import dirichlet_partition
-from repro.data.synthetic import gaussian_image_dataset, lm_corpus
+from repro.data.synthetic import gaussian_image_dataset
 from repro.fl import (ExperimentSpec, FLConfig, run_experiment,
                       build_task_model, compressed_bits, stc_compress)
 

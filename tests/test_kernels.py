@@ -10,7 +10,6 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
-from repro.kernels.stc_compress import stc_apply_pallas, stc_reduce_pallas
 
 KEY = jax.random.PRNGKey(0)
 

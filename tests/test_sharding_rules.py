@@ -1,6 +1,5 @@
 """Sharding-rule engine tests: spec shapes match param ranks, divisibility
 guard works, and a miniature end-to-end lower on a host mesh succeeds."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced same-family configs, one forward +
 one train step on CPU, asserting output shapes and no NaNs (deliverable f).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Optimizer / checkpoint / data pipeline substrate tests."""
-import os
 import tempfile
 
 import jax
@@ -11,7 +10,7 @@ from repro.configs import get_smoke_config
 from repro.data.pipeline import ClientLoader, lm_batches
 from repro.data.synthetic import lm_corpus
 from repro.models import build_model
-from repro.train import (adamw, apply_updates, clip_by_global_norm,
+from repro.train import (adamw, clip_by_global_norm,
                          constant_lr, cosine_lr, init_train_state,
                          latest_step, make_train_step, restore_checkpoint,
                          save_checkpoint, sgd, warmup_cosine_lr)
@@ -120,7 +119,6 @@ def test_lm_batches_shapes_and_shift():
 def test_grad_accumulation_matches_single_step():
     """accum_steps=K over a batch must equal one step on the full batch
     (same mean loss/grads up to fp accumulation order)."""
-    import dataclasses
     from repro.train.trainstep import make_train_step, init_train_state
     cfg = get_smoke_config("smollm_360m")
     model = build_model(cfg)
