@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["ChannelParams", "ChannelModel"]
@@ -60,6 +62,32 @@ class ChannelModel:
         resources, so co-channel CUE power raises the noise floor)."""
         p = self.params
         return gains_sq * p.tx_power_w / (p.noise_w + interference_w)
+
+    # ------------------------------------------------- device (jnp) plane
+    #
+    # Pure-JAX twins of the sampling/arithmetic above, keyed by explicit PRNG
+    # keys so they are jit/vmap-safe inside the device-resident planner
+    # (repro.core.planner).  The numpy methods stay the host/parity oracle.
+
+    def large_scale_db_jax(self, dist_m: jax.Array) -> jax.Array:
+        """Eq. (13) in jnp; traceable."""
+        p = self.params
+        return p.beta0_db - 10.0 * p.kappa * jnp.log10(
+            jnp.maximum(dist_m, p.d0_m) / p.d0_m)
+
+    def sample_gains_jax(self, key: jax.Array, dist_m: jax.Array
+                         ) -> jax.Array:
+        """Eq. (12) in jnp: |g|² = β·|h|², h ~ CN(0,1) ⇒ |h|² ~ Exp(1)."""
+        beta = 10.0 ** (self.large_scale_db_jax(dist_m) / 10.0)
+        h2 = jax.random.exponential(key, dist_m.shape)
+        return beta * h2
+
+    def snr_jax(self, gains_sq: jax.Array,
+                interference_w: jax.Array | float = 0.0) -> jax.Array:
+        """Eq. (14) SNR for traced arrays — :meth:`snr` is pure operator
+        arithmetic and already trace-safe; this alias keeps the device
+        plane's API uniform without duplicating the formula."""
+        return self.snr(gains_sq, interference_w)
 
     def sample_cue_interference(self, rng: np.random.Generator,
                                 n_cues: int, cell_radius_m: float = 250.0

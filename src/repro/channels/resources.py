@@ -10,13 +10,17 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["spectral_efficiency", "required_bandwidth", "outage_probability",
-           "ResourceLedger"]
+           "spectral_efficiency_jax", "required_bandwidth_jax",
+           "outage_probability_jax", "ResourceLedger", "GAMMA_FLOOR"]
 
 SUBFRAME_S = 1e-3          # 1 ms
 PRB_HZ = 180e3             # physical resource block bandwidth
+GAMMA_FLOOR = 0.05         # feasibility floor applied before ledger charging
 
 
 def spectral_efficiency(snr: np.ndarray) -> np.ndarray:
@@ -45,6 +49,35 @@ def outage_probability(gamma_min: np.ndarray | float, snr: np.ndarray
     thr = 2.0 ** np.asarray(gamma_min, np.float64) - 1.0
     snr = np.maximum(np.asarray(snr, np.float64), 1e-12)
     return 1.0 - np.exp(-thr / snr)
+
+
+# ----------------------------------------------------- device (jnp) plane
+#
+# Pure-JAX twins of the three closed forms above, traceable inside the jitted
+# planner plane (repro.core.planner); the numpy versions remain the
+# host/parity oracle used by the ledger path.
+
+def spectral_efficiency_jax(snr: jax.Array) -> jax.Array:
+    """Eq. (14) in jnp: γ = log2(1 + SNR)."""
+    return jnp.log2(1.0 + snr)
+
+
+def required_bandwidth_jax(model_bits: jax.Array | float, gamma: jax.Array
+                           ) -> jax.Array:
+    """Eq. (15)/(37) in jnp: B = S / γ, ∞ on dead links."""
+    return jnp.where(gamma > 1e-9, model_bits / jnp.maximum(gamma, 1e-9),
+                     jnp.inf)
+
+
+def outage_probability_jax(gamma_min: jax.Array | float, snr: jax.Array
+                           ) -> jax.Array:
+    """Eq. (39) Rayleigh outage in jnp.
+
+    ``-expm1`` rather than ``1 - exp``: float32 cancellation at small
+    outage would otherwise quantize P_out to ~1e-7 steps.
+    """
+    thr = 2.0 ** jnp.asarray(gamma_min) - 1.0
+    return -jnp.expm1(-thr / jnp.maximum(snr, 1e-12))
 
 
 @dataclasses.dataclass

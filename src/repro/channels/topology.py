@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CellTopology"]
@@ -40,3 +42,24 @@ class CellTopology:
         """Bandwidth (Hz) consumed by background CUEs this round (Σ B̃ in 18f)."""
         n_cues = rng.poisson(self.cue_rate)
         return float(n_cues) * self.cue_bandwidth_hz
+
+    # ------------------------------------------------- device (jnp) plane
+
+    def sample_positions_jax(self, key: jax.Array, n: int | None = None
+                             ) -> jax.Array:
+        """Pure-JAX twin of :meth:`sample_positions`, keyed by an explicit
+        PRNG key; broadcasts under ``vmap`` over a batch of keys."""
+        n = self.num_pues if n is None else n
+        kr, kt = jax.random.split(key)
+        r = self.radius_m * jnp.sqrt(jax.random.uniform(kr, (n,)))
+        theta = jax.random.uniform(kt, (n,), minval=0.0,
+                                   maxval=2.0 * jnp.pi)
+        return jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+
+    @staticmethod
+    def pairwise_distances_jax(pos: jax.Array) -> jax.Array:
+        """jnp :meth:`pairwise_distances` (safe unit diagonal); traceable."""
+        diff = pos[..., :, None, :] - pos[..., None, :, :]
+        d = jnp.linalg.norm(diff, axis=-1)
+        n = d.shape[-1]
+        return jnp.where(jnp.eye(n, dtype=bool), 1.0, d)

@@ -1,20 +1,29 @@
 """FedDif core: the paper's primary contribution as composable modules.
 
-- ``dol``: DSI/DoL state and IID-distance metrics (Sec. III-B, Lemmas 1–2).
-- ``matching``: Kuhn–Munkres assignment (Algorithm 1's solver).
+- ``dol``: DSI/DoL state and IID-distance metrics (Sec. III-B, Lemmas 1–2);
+  the mutable host ``DiffusionState`` and its immutable array-pytree twin
+  ``PlannerState``.
+- ``matching``: the two Algorithm-1 solvers — Kuhn–Munkres (host oracle)
+  and the Bertsekas ε-scaling auction (jitted device hot path).
 - ``auction``: bids, feasibility constraints (18b–18f), winner selection.
-- ``diffusion``: diffusion-round planner (Algorithm 2 control plane).
+- ``diffusion``: diffusion-round planner (Algorithm 2 control plane) with
+  ``mode="host" | "jax"``.
+- ``planner``: the jitted/batched device planner behind ``mode="jax"``.
 - ``schedule``: the strategy-agnostic RoundSchedule IR + ledger replay
   (the seam between schedulers and executors).
 - ``aggregation``: FedAvg (Eq. 11) + Prop.-1 divergence bound.
 """
-from repro.core.dol import (DiffusionState, dsi_from_counts, iid_distance,
-                            iid_distance_candidates, optimal_dsi,
-                            min_feasible_data_size, closed_form_iid_distance,
-                            uniform_dol, update_dol, entropy)
-from repro.core.matching import max_weight_matching, hungarian_min_cost
+from repro.core.dol import (DiffusionState, PlannerState, dsi_from_counts,
+                            iid_distance, iid_distance_candidates,
+                            optimal_dsi, min_feasible_data_size,
+                            closed_form_iid_distance, uniform_dol,
+                            update_dol, entropy)
+from repro.core.matching import (max_weight_matching, hungarian_min_cost,
+                                 auction_assign, auction_matching)
 from repro.core.auction import AuctionConfig, AuctionResult, compute_bids, run_auction
-from repro.core.diffusion import DiffusionHop, DiffusionPlan, DiffusionPlanner
+from repro.core.diffusion import (DiffusionHop, DiffusionPlan,
+                                  DiffusionPlanner, PlanCache,
+                                  feddif_cache_key, plan_cache_key)
 from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule, TrainOp,
                                  WireEvent, charge_schedule,
                                  complete_round_permutation)
@@ -22,12 +31,14 @@ from repro.core.aggregation import (fedavg, weight_distance, divergence_bound,
                                     model_bits)
 
 __all__ = [
-    "DiffusionState", "dsi_from_counts", "iid_distance",
+    "DiffusionState", "PlannerState", "dsi_from_counts", "iid_distance",
     "iid_distance_candidates", "optimal_dsi", "min_feasible_data_size",
     "closed_form_iid_distance", "uniform_dol", "update_dol", "entropy",
     "max_weight_matching", "hungarian_min_cost",
+    "auction_assign", "auction_matching",
     "AuctionConfig", "AuctionResult", "compute_bids", "run_auction",
-    "DiffusionHop", "DiffusionPlan", "DiffusionPlanner",
+    "DiffusionHop", "DiffusionPlan", "DiffusionPlanner", "PlanCache",
+    "feddif_cache_key", "plan_cache_key",
     "MixOp", "PermuteOp", "RoundSchedule", "TrainOp", "WireEvent",
     "charge_schedule", "complete_round_permutation",
     "fedavg", "weight_distance", "divergence_bound", "model_bits",

@@ -26,7 +26,9 @@ from repro.core import dol as dol_lib
 from repro.core.auction import AuctionConfig, run_auction
 
 __all__ = ["DiffusionHop", "DiffusionPlan", "DiffusionPlanner", "PlanCache",
-           "plan_cache_key"]
+           "plan_cache_key", "feddif_cache_key", "PLANNER_MODES"]
+
+PLANNER_MODES = ("host", "jax")
 
 
 @dataclasses.dataclass
@@ -46,11 +48,13 @@ class DiffusionPlan:
     num_rounds: int
     final_iid_distance: np.ndarray      # (M,)
     efficiency_per_round: list[float]
+    num_models: int | None = None       # M — set by the planner
 
     def hops_in_round(self, k: int) -> list[DiffusionHop]:
         return [h for h in self.hops if h.round_index == k]
 
-    def as_permutations(self, num_clients: int
+    def as_permutations(self, num_clients: int,
+                        num_models: int | None = None
                         ) -> list[tuple[np.ndarray, np.ndarray]]:
         """Per-round (permutation, train_mask) for the SPMD ppermute path.
 
@@ -62,10 +66,20 @@ class DiffusionPlan:
         slots); ``train_mask`` marks the slots whose freshly received model
         performs a local update, i.e. the scheduled dsts.
 
+        ``num_models`` is the fleet size M; models that never hop still own
+        a slot, so inferring M from the hop list would silently drop them
+        from the parking bookkeeping.  Defaults to the plan's recorded M
+        (falling back to hop-list inference only for plans from external
+        sources that predate the field).
+
         perm[k][c] = slot that receives slot c's buffer in round k.
         """
         from repro.core.schedule import complete_round_permutation
-        num_models = (max(h.model for h in self.hops) + 1) if self.hops else 0
+        if num_models is None:
+            num_models = self.num_models
+        if num_models is None:
+            num_models = (max(h.model for h in self.hops) + 1
+                          if self.hops else 0)
         slot_of_model = np.arange(num_models) % max(num_clients, 1)
         out = []
         for k in range(self.num_rounds):
@@ -95,6 +109,28 @@ def plan_cache_key(topology_seed: int, round_index: int, dsi: np.ndarray,
             float(gamma_min), str(metric), h.hexdigest(), tuple(extra))
 
 
+def feddif_cache_key(cfg, t: int, dsi: np.ndarray, data_sizes: np.ndarray,
+                     model_bits: float, auction: AuctionConfig) -> tuple:
+    """The one :func:`plan_cache_key` builder for FedDif call sites.
+
+    ``cfg`` is the experiment's ``FLConfig`` (duck-typed to avoid the import
+    cycle).  Folds in every plan input: the sizing knobs, the full
+    :class:`AuctionConfig` surface (incl. ``outage_max`` and
+    ``bandwidth_budget``, which alter feasibility/FCFS), and the planner
+    mode (host and jax plans are parity-checked but not bit-guaranteed, so
+    they never share a cache line).  Schedulers, the replicate engines and
+    the sweep pre-planner all call this helper — hand-built ``extra=``
+    tuples cannot drift apart.
+    """
+    return plan_cache_key(
+        cfg.topology_seed, t, dsi, data_sizes, cfg.epsilon, cfg.gamma_min,
+        cfg.metric,
+        extra=(cfg.num_clients, cfg.num_models, float(model_bits),
+               cfg.max_diffusion_rounds, cfg.allow_retraining, cfg.underlay,
+               float(auction.outage_max), float(auction.bandwidth_budget),
+               getattr(cfg, "planner", "host")))
+
+
 class PlanCache:
     """LRU memo of ``(DiffusionPlan, post-plan DiffusionState)`` snapshots.
 
@@ -114,6 +150,11 @@ class PlanCache:
 
     def __len__(self) -> int:
         return len(self._store)
+
+    def __contains__(self, key: tuple) -> bool:
+        """Presence probe that does not touch hit/miss counters or LRU
+        order (used by the sweep pre-planner to skip planned rounds)."""
+        return key in self._store
 
     def lookup(self, key: tuple):
         """Return ``(plan, post_state)`` or ``None``; counts hits/misses."""
@@ -145,13 +186,19 @@ class DiffusionPlanner:
                  auction: AuctionConfig | None = None,
                  epsilon: float = 0.04,
                  max_rounds: int | None = None,
-                 underlay: bool = False):
+                 underlay: bool = False,
+                 mode: str = "host"):
+        assert mode in PLANNER_MODES, mode
+        if mode == "jax" and underlay:
+            raise ValueError("planner mode 'jax' does not model underlay "
+                             "CUE interference (Appendix C-F); use 'host'")
         self.topology = topology or CellTopology()
         self.channel = channel or ChannelModel()
         self.auction = auction or AuctionConfig()
         self.epsilon = epsilon          # minimum tolerable IID distance
         self.max_rounds = max_rounds
         self.underlay = underlay        # Appendix C-F: D2D reuses CUE PRBs
+        self.mode = mode                # "host" oracle | "jax" device plane
 
     def plan_communication_round(
             self, state: dol_lib.DiffusionState, dsi: np.ndarray,
@@ -165,7 +212,18 @@ class DiffusionPlanner:
         a hit skips the whole auction loop: the cached plan is returned and
         ``state`` is fast-forwarded to the cached post-plan snapshot.  The
         caller is responsible for a key that captures every plan input.
+
+        With ``mode='jax'`` the same contract is served by the jitted
+        device planner (:mod:`repro.core.planner`): identical hop lists on
+        the same channel draws, but the draws are pre-sampled ``max_rounds``
+        deep, so the *post-plan position* of ``rng`` differs from the lazy
+        host loop's.
         """
+        if self.mode == "jax":
+            from repro.core.planner import plan_communication_round_jax
+            return plan_communication_round_jax(
+                self, state, dsi, data_sizes, rng, positions=positions,
+                cache=cache, cache_key=cache_key)
         if cache is not None and cache_key is not None:
             entry = cache.lookup(cache_key)
             if entry is not None:
@@ -222,7 +280,8 @@ class DiffusionPlanner:
         plan = DiffusionPlan(hops=hops, num_rounds=k,
                              final_iid_distance=state.iid_distances(
                                  self.auction.metric),
-                             efficiency_per_round=eff_hist)
+                             efficiency_per_round=eff_hist,
+                             num_models=int(state.dol.shape[0]))
         if cache is not None and cache_key is not None:
             cache.store(cache_key, plan, state)
         return plan

@@ -20,7 +20,7 @@ run inside jitted schedulers and on host alike.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,7 @@ Array = jax.Array
 
 __all__ = [
     "DiffusionState",
+    "PlannerState",
     "uniform_dol",
     "dsi_from_counts",
     "update_dol",
@@ -194,6 +195,77 @@ def entropy(dol: Array) -> Array:
     return -jnp.sum(p * jnp.log(p), axis=-1)
 
 
+class PlannerState(NamedTuple):
+    """Functional (immutable) twin of :class:`DiffusionState`.
+
+    A plain array pytree — every field is a fixed-shape ``jax.Array`` — so a
+    whole diffusion round loop over it can live inside ``jax.lax.scan`` /
+    ``lax.while_loop`` and be ``vmap``-ed over a leading batch axis (sweep
+    cells, topology seeds).  All updates return a *new* state; masked-update
+    helpers keep shapes static for the jitted planner
+    (:mod:`repro.core.planner`).
+    """
+    dol: Array            # (..., M, C)
+    chain_size: Array     # (..., M)
+    visited: Array        # (..., M, N) bool
+    holder: Array         # (..., M) int32
+
+    @classmethod
+    def init(cls, num_models: int, num_clients: int, num_classes: int
+             ) -> "PlannerState":
+        return cls(
+            dol=jnp.zeros((num_models, num_classes), jnp.float32),
+            chain_size=jnp.zeros((num_models,), jnp.float32),
+            visited=jnp.zeros((num_models, num_clients), bool),
+            holder=(jnp.arange(num_models, dtype=jnp.int32)
+                    % max(num_clients, 1)),
+        )
+
+    def record_training(self, model: Array | int, client: Array | int,
+                        dsi: Array, data_size: Array | float
+                        ) -> "PlannerState":
+        """Eq. (2) fold of one (model, client) pair — functional analogue of
+        ``DiffusionState.record_training``; jit/scan safe."""
+        new_dol, new_size = update_dol(self.dol[model], self.chain_size[model],
+                                       jnp.asarray(dsi), data_size)
+        return PlannerState(
+            dol=self.dol.at[model].set(new_dol),
+            chain_size=self.chain_size.at[model].set(new_size),
+            visited=self.visited.at[model, client].set(True),
+            holder=self.holder.at[model].set(
+                jnp.asarray(client, self.holder.dtype)),
+        )
+
+    def record_round(self, dst: Array, mask: Array, dsi: Array,
+                     data_sizes: Array) -> "PlannerState":
+        """Fold one diffusion round of hops in a single masked update.
+
+        Args:
+          dst:  (M,) int — destination client per model (ignored where
+            ``mask`` is False; must still be a valid index).
+          mask: (M,) bool — which models actually hop this round.
+          dsi / data_sizes: (N, C) / (N,) client control-plane inputs.
+
+        Each scheduled model trains on its destination (constraint 18d makes
+        destinations unique, so rows never collide).  Shapes are static —
+        this is the update the jitted round loop applies every ``lax.scan`` /
+        ``while_loop`` step.
+        """
+        dst = jnp.asarray(dst, self.holder.dtype)
+        new_dol, new_size = update_dol(self.dol, self.chain_size,
+                                       dsi[dst], data_sizes[dst])
+        m = jnp.arange(self.dol.shape[0])
+        return PlannerState(
+            dol=jnp.where(mask[:, None], new_dol, self.dol),
+            chain_size=jnp.where(mask, new_size, self.chain_size),
+            visited=self.visited.at[m, dst].set(self.visited[m, dst] | mask),
+            holder=jnp.where(mask, dst, self.holder),
+        )
+
+    def iid_distances(self, metric: str = "w1_norm") -> Array:
+        return iid_distance(self.dol, metric)
+
+
 @dataclasses.dataclass
 class DiffusionState:
     """Host-side bookkeeping for one communication round of FedDif.
@@ -246,3 +318,21 @@ class DiffusionState:
         self.visited = other.visited.copy()
         self.holder = other.holder.copy()
         self.round_index = other.round_index
+
+    def functional(self) -> PlannerState:
+        """Device-ready immutable view for the jitted planner plane."""
+        return PlannerState(
+            dol=jnp.asarray(self.dol, jnp.float32),
+            chain_size=jnp.asarray(self.chain_size, jnp.float32),
+            visited=jnp.asarray(self.visited, bool),
+            holder=jnp.asarray(self.holder, jnp.int32),
+        )
+
+    def update_from(self, fstate: PlannerState, rounds_advanced: int = 0
+                    ) -> None:
+        """Adopt a post-plan :class:`PlannerState` (in-place, host arrays)."""
+        self.dol = np.asarray(fstate.dol, np.float32)
+        self.chain_size = np.asarray(fstate.chain_size, np.float32)
+        self.visited = np.asarray(fstate.visited, bool)
+        self.holder = np.asarray(fstate.holder, np.int64)
+        self.round_index += int(rounds_advanced)

@@ -40,7 +40,7 @@ def summarize_curves(curves: list[list[float]]) -> dict:
 
 def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
                    seeds: list[int], cells: list[dict],
-                   executor: str = "host",
+                   executor: str = "host", planner: str = "host",
                    plan_cache_stats: dict | None = None,
                    wall_clock_s: float | None = None) -> dict:
     """Assemble one ``BENCH_feddif_<sweep>.json`` payload.
@@ -58,6 +58,7 @@ def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
         "axis": axis,
         "mode": "smoke" if smoke else "full",
         "executor": executor,
+        "planner": planner,
         "seeds": [int(s) for s in seeds],
         "created_unix": time.time(),
         "wall_clock_s": wall_clock_s,

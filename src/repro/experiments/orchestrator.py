@@ -28,14 +28,109 @@ from __future__ import annotations
 import time
 from typing import Sequence
 
-from repro.core.diffusion import PlanCache
+import numpy as np
+
+from repro.channels.fading import ChannelModel
+from repro.channels.topology import CellTopology
+from repro.core.auction import AuctionConfig
+from repro.core.diffusion import PlanCache, feddif_cache_key
+from repro.core.dol import DiffusionState
 from repro.experiments import artifacts
 from repro.experiments.registry import SweepCell, expand_sweep, get_sweep
 from repro.experiments.replicate import (SEED_VMAP_STRATEGIES,
                                          run_replicates_loop,
                                          run_replicates_vmapped)
+from repro.fl.server import _uplink_gamma
 
-__all__ = ["run_cell", "run_sweep"]
+__all__ = ["run_cell", "run_sweep", "prepopulate_plan_cache"]
+
+_FEDDIF_STRATEGIES = ("feddif", "feddif_stc", "feddif_prox")
+
+
+def prepopulate_plan_cache(cells: Sequence[SweepCell], cache: PlanCache
+                           ) -> dict:
+    """Plan every FedDif cell × communication round in batched device calls.
+
+    For each eligible cell (FedDif family, ``planner='jax'``, topology seed
+    set, no underlay) this replays the control-plane RNG exactly as
+    ``run_federated`` would (positions → uplink draw → Rayleigh rounds),
+    builds one :class:`~repro.core.planner.PlanInputs` per communication
+    round, groups them by static signature (N, M, C, max_rounds, metric,
+    retraining) and plans each group in **one** vmapped device call.  The
+    decoded plans + post-plan states land in ``cache`` under the same
+    :func:`~repro.core.diffusion.feddif_cache_key` the schedulers build, so
+    every subsequent ``run_cell`` — any engine, any replicate seed — replays
+    instead of replanning.
+
+    Returns ``{"planned": k, "skipped": j, "batches": b}``.
+    """
+    from repro.core.diffusion import DiffusionPlanner
+    from repro.core.planner import (decode_plan, plan_round_inputs,
+                                    plan_rounds_batched)
+    from repro.fl.experiment import load_experiment_data, spec_model_bits
+
+    groups: dict[tuple, list] = {}
+    skipped = 0
+    for cell in cells:
+        cfg = cell.spec.fl
+        if (cell.strategy not in _FEDDIF_STRATEGIES
+                or getattr(cfg, "planner", "host") != "jax"
+                or cfg.topology_seed is None or cfg.underlay):
+            skipped += 1
+            continue
+        _, _, part, _ = load_experiment_data(cell.spec, with_loaders=False)
+        dsi, data_sizes = part.dsi, part.data_sizes
+        n, m, c = cfg.num_clients, cfg.num_models, dsi.shape[1]
+        model_bits = spec_model_bits(cell.spec)
+        topology = CellTopology(num_pues=n)
+        channel = ChannelModel()
+        auction = AuctionConfig(gamma_min=cfg.gamma_min, metric=cfg.metric,
+                                allow_retraining=cfg.allow_retraining,
+                                model_bits=model_bits)
+        planner = DiffusionPlanner(topology, channel, auction,
+                                   epsilon=cfg.epsilon,
+                                   max_rounds=cfg.max_diffusion_rounds,
+                                   mode="jax")
+        max_rounds = cfg.max_diffusion_rounds or n * (n - 1)
+        for t in range(cfg.rounds):
+            key = feddif_cache_key(cfg, t, dsi, data_sizes, model_bits,
+                                   auction)
+            if key in cache:
+                skipped += 1
+                continue
+            # Mirror run_federated's control-plane stream for round t.
+            ctrl_rng = np.random.default_rng([cfg.topology_seed, t])
+            pos = topology.sample_positions(ctrl_rng, n)
+            _uplink_gamma(channel, pos, ctrl_rng)     # keep stream aligned
+            state = DiffusionState.init(m, n, c)
+            for mi in range(m):
+                holder = int(state.holder[mi])
+                state.record_training(mi, holder, dsi[holder],
+                                      float(data_sizes[holder]))
+            inp, gamma64 = plan_round_inputs(planner, state, dsi, data_sizes,
+                                             ctrl_rng, positions=pos)
+            sig = (n, m, c, max_rounds, cfg.metric, cfg.allow_retraining)
+            groups.setdefault(sig, []).append(
+                (key, inp, state, m, gamma64, model_bits))
+
+    planned = 0
+    for sig, items in groups.items():
+        _, _, _, max_rounds, metric, allow_retraining = sig
+        outs = plan_rounds_batched([inp for _, inp, _, _, _, _ in items],
+                                   metric=metric,
+                                   allow_retraining=allow_retraining)
+        for (key, _, state, m, gamma64, model_bits), out in zip(items, outs):
+            if not bool(out.converged):
+                import warnings
+                warnings.warn("sweep pre-planner: an auction hit its "
+                              "iteration cap; the cached plan may be "
+                              "truncated", RuntimeWarning, stacklevel=2)
+            plan = decode_plan(out, num_models=m, gamma_seq64=gamma64,
+                               model_bits=model_bits)
+            state.update_from(out.state, rounds_advanced=int(out.num_rounds))
+            cache.store(key, plan, state)
+            planned += 1
+    return {"planned": planned, "skipped": skipped, "batches": len(groups)}
 
 
 def _pick_engine(cell: SweepCell, engine: str) -> str:
@@ -109,7 +204,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
 
 def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
               out_dir: str | None = ".", engine: str = "auto",
-              executor: str = "host",
+              executor: str = "host", planner: str = "host",
               plan_cache: PlanCache | None = None,
               log=None, **spec_overrides) -> dict:
     """Expand a registered sweep, run every cell, write the BENCH artifact.
@@ -123,6 +218,11 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
       engine: replication engine, see :func:`run_cell`.
       executor: ``FLConfig.executor`` stamped on every cell — ``"host"``
         reference loop or ``"fleet"`` client-stacked data plane.
+      planner: ``FLConfig.planner`` stamped on every cell — ``"host"``
+        numpy control plane or ``"jax"`` device planner.  With ``"jax"``
+        the whole sweep's diffusion plans are computed up front in batched
+        device calls (:func:`prepopulate_plan_cache`); the per-cell runs
+        then replay them from the shared cache.
       plan_cache: share one across sweeps if desired; default is a fresh
         cache per sweep (still shared across all cells *and* seeds).
       spec_overrides: forwarded to ``SweepDef.expand`` (e.g. tiny
@@ -132,9 +232,14 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
     """
     defn = get_sweep(name)
     cells = expand_sweep(name, smoke=smoke, executor=executor,
-                         **spec_overrides)
+                         planner=planner, **spec_overrides)
     cache = plan_cache if plan_cache is not None else PlanCache()
     t0 = time.time()
+    if planner == "jax":
+        pre = prepopulate_plan_cache(cells, cache)
+        if log is not None:
+            log(f"{name},preplan,planned={pre['planned']},"
+                f"batches={pre['batches']},sec={time.time() - t0:.1f}")
     records = []
     for cell in cells:
         rec = run_cell(cell, seeds, plan_cache=cache, engine=engine)
@@ -150,7 +255,7 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
     artifact = artifacts.build_artifact(
         sweep_name=name, figure=defn.figure, axis=defn.axis, smoke=smoke,
         seeds=list(seeds), cells=records, executor=executor,
-        plan_cache_stats=cache.stats(),
+        planner=planner, plan_cache_stats=cache.stats(),
         wall_clock_s=time.time() - t0)
     if out_dir is not None:
         artifact["path"] = artifacts.write_artifact(artifact, out_dir)

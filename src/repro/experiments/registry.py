@@ -84,7 +84,8 @@ class SweepDef:
     fl_overrides: dict = dataclasses.field(default_factory=dict)
 
     def expand(self, smoke: bool = True, topology_seed: int = 0,
-               executor: str = "host", **overrides) -> list[SweepCell]:
+               executor: str = "host", planner: str = "host",
+               **overrides) -> list[SweepCell]:
         """Expand to concrete cells.
 
         Args:
@@ -95,6 +96,9 @@ class SweepDef:
           executor: data plane stamped on every cell — ``"host"`` (per-slot
             reference loop) or ``"fleet"`` (client-stacked vmap); see
             ``FLConfig.executor``.
+          planner: control plane stamped on every cell — ``"host"`` numpy
+            oracle or ``"jax"`` batched device planner; see
+            ``FLConfig.planner``.
           overrides: extra ``ExperimentSpec`` field overrides (e.g.
             ``num_samples=500`` for tests).
         """
@@ -111,7 +115,7 @@ class SweepDef:
                 fl_kwargs: dict = dict(
                     strategy=strategy, rounds=rounds, num_clients=clients,
                     num_models=clients, seed=0, topology_seed=topology_seed,
-                    executor=executor)
+                    executor=executor, planner=planner)
                 spec_kwargs: dict = dict(
                     task="fcn", alpha=1.0, num_samples=samples, data_seed=0)
                 fl_kwargs.update(self.fl_overrides)

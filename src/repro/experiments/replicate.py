@@ -35,16 +35,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.channels.fading import ChannelModel
-from repro.channels.resources import ResourceLedger
+from repro.channels.resources import GAMMA_FLOOR, ResourceLedger
 from repro.channels.topology import CellTopology
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
-from repro.core.diffusion import DiffusionPlanner, PlanCache, plan_cache_key
+from repro.core.diffusion import (DiffusionPlanner, PlanCache,
+                                  feddif_cache_key)
 from repro.core.dol import DiffusionState, iid_distance
-from repro.data.partitioner import dirichlet_partition
-from repro.data.pipeline import make_client_loaders
-from repro.data.synthetic import gaussian_image_dataset
-from repro.fl.experiment import ExperimentSpec, run_experiment
+from repro.fl.experiment import (ExperimentSpec, load_experiment_data,
+                                 run_experiment)
 from repro.fl.models import build_task_model
 from repro.fl.server import FLResult, _uplink_gamma
 from repro.train import optimizer as opt_lib
@@ -123,13 +122,7 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     seeds = [int(s) for s in seeds]
 
     # ---- data / model setup (identical to run_experiment, done once) -----
-    rng = np.random.default_rng(spec.data_seed)
-    ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
-                                seed=spec.data_seed)
-    test, train = ds.split(spec.test_frac, rng)
-    part = dirichlet_partition(train.y, cfg.num_clients, spec.alpha, rng)
-    loaders = make_client_loaders(train, part, cfg.batch_size,
-                                  seed=spec.data_seed)
+    train, test, part, loaders = load_experiment_data(spec)
     model = build_task_model(spec.task, spec.dim, spec.num_classes)
     dsi, data_sizes = part.dsi, part.data_sizes
     n, m = cfg.num_clients, cfg.num_models
@@ -153,7 +146,7 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     planner = DiffusionPlanner(topology, channel, auction,
                                epsilon=cfg.epsilon,
                                max_rounds=cfg.max_diffusion_rounds,
-                               underlay=cfg.underlay)
+                               underlay=cfg.underlay, mode=cfg.planner)
     ledger = ResourceLedger()
     one_seed = jax.tree.map(lambda x: x[0], global_params)
     model_bits = agg.model_bits(one_seed, cfg.bits_per_param)
@@ -164,7 +157,8 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     for t in range(cfg.rounds):
         ctrl_rng = np.random.default_rng([cfg.topology_seed, t])
         pos = topology.sample_positions(ctrl_rng, n)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng), 0.05)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng),
+                              GAMMA_FLOOR)
 
         if cfg.strategy == "fedavg":
             ledger.charge_downlink(model_bits, float(np.median(up_gamma)), n)
@@ -189,17 +183,14 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
                                       float(data_sizes[holder]))
             cache_key = None
             if plan_cache is not None:
-                cache_key = plan_cache_key(
-                    cfg.topology_seed, t, dsi, data_sizes, cfg.epsilon,
-                    cfg.gamma_min, cfg.metric,
-                    extra=(n, m, model_bits, cfg.max_diffusion_rounds,
-                           cfg.allow_retraining, cfg.underlay))
+                cache_key = feddif_cache_key(cfg, t, dsi, data_sizes,
+                                             model_bits, auction)
             plan = planner.plan_communication_round(
                 state, dsi, data_sizes, ctrl_rng, positions=pos,
                 cache=plan_cache, cache_key=cache_key)
             for k in range(plan.num_rounds):
                 for hop in plan.hops_in_round(k):
-                    ledger.charge_d2d(model_bits, max(hop.gamma, 0.05))
+                    ledger.charge_d2d(model_bits, max(hop.gamma, GAMMA_FLOOR))
                     models[hop.model], _ = local_update(
                         models[hop.model], list(loaders[hop.dst].epoch()))
             for mi in range(m):

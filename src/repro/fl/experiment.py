@@ -17,7 +17,8 @@ from repro.data.synthetic import gaussian_image_dataset
 from repro.fl.models import build_task_model
 from repro.fl.server import FLConfig, FLResult, run_federated
 
-__all__ = ["ExperimentSpec", "run_experiment"]
+__all__ = ["ExperimentSpec", "run_experiment", "load_experiment_data",
+           "spec_model_bits"]
 
 
 @dataclasses.dataclass
@@ -32,6 +33,38 @@ class ExperimentSpec:
     data_seed: int = 0
 
 
+def load_experiment_data(spec: ExperimentSpec, with_loaders: bool = True):
+    """Dataset → split → Dirichlet partition → loaders for one cell.
+
+    The single definition of the ``data_seed`` RNG consumption order, shared
+    by :func:`run_experiment`, the replicate engines and the sweep
+    pre-planner — so a cell's DSIs (and therefore its plan-cache keys) are
+    identical no matter which engine computes them.
+
+    Returns ``(train, test, part, loaders)``.  ``with_loaders=False`` skips
+    loader construction (loaders draw from their own seed, so the partition
+    is unaffected) — the sweep pre-planner only needs ``part``.
+    """
+    rng = np.random.default_rng(spec.data_seed)
+    ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
+                                seed=spec.data_seed)
+    test, train = ds.split(spec.test_frac, rng)
+    part = dirichlet_partition(train.y, spec.fl.num_clients, spec.alpha, rng)
+    loaders = (make_client_loaders(train, part, spec.fl.batch_size,
+                                   seed=spec.data_seed)
+               if with_loaders else None)
+    return train, test, part, loaders
+
+
+def spec_model_bits(spec: ExperimentSpec) -> float:
+    """S (Eq. 15) for a cell's task model without materializing weights —
+    shapes come from ``jax.eval_shape`` on the model's init."""
+    from repro.core.aggregation import model_bits
+    model = build_task_model(spec.task, spec.dim, spec.num_classes)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return model_bits(shapes, spec.fl.bits_per_param)
+
+
 def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
     """Run one cell of a paper figure/table.
 
@@ -43,14 +76,7 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
     reference loop or ``"fleet"`` client-stacked vmap) — schedules and
     ledger charges are identical either way.
     """
-    rng = np.random.default_rng(spec.data_seed)
-    ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
-                                seed=spec.data_seed)
-    test, train = ds.split(spec.test_frac, rng)
-
-    part = dirichlet_partition(train.y, spec.fl.num_clients, spec.alpha, rng)
-    loaders = make_client_loaders(train, part, spec.fl.batch_size,
-                                  seed=spec.data_seed)
+    train, test, part, loaders = load_experiment_data(spec)
     model = build_task_model(spec.task, spec.dim, spec.num_classes)
 
     def client_epoch(i):

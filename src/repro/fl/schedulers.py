@@ -22,17 +22,15 @@ from typing import Callable
 import numpy as np
 
 from repro.channels.fading import ChannelModel
-from repro.channels.resources import spectral_efficiency
+from repro.channels.resources import GAMMA_FLOOR, spectral_efficiency
 from repro.channels.topology import CellTopology
-from repro.core.diffusion import DiffusionPlanner, PlanCache, plan_cache_key
+from repro.core.diffusion import DiffusionPlanner, PlanCache, feddif_cache_key
 from repro.core.dol import DiffusionState, iid_distance
 from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule, TrainOp,
                                  WireEvent, complete_round_permutation)
 from repro.fl.compression import compressed_bits
 
-__all__ = ["RoundContext", "SCHEDULERS", "PROX_STRATEGIES"]
-
-GAMMA_FLOOR = 0.05     # feasibility floor applied before ledger charging
+__all__ = ["RoundContext", "SCHEDULERS", "PROX_STRATEGIES", "GAMMA_FLOOR"]
 
 # Strategies whose local solver is the FedProx proximal step.
 PROX_STRATEGIES = ("fedprox", "feddif_prox")
@@ -148,11 +146,8 @@ def schedule_feddif(ctx: RoundContext) -> RoundSchedule:
 
     cache_key = None
     if ctx.plan_cache is not None and cfg.topology_seed is not None:
-        cache_key = plan_cache_key(
-            cfg.topology_seed, ctx.t, ctx.dsi, ctx.data_sizes, cfg.epsilon,
-            cfg.gamma_min, cfg.metric,
-            extra=(n, m, ctx.model_bits, cfg.max_diffusion_rounds,
-                   cfg.allow_retraining, cfg.underlay))
+        cache_key = feddif_cache_key(cfg, ctx.t, ctx.dsi, ctx.data_sizes,
+                                     ctx.model_bits, ctx.planner.auction)
     plan = ctx.planner.plan_communication_round(
         state, ctx.dsi, ctx.data_sizes, ctx.rng, positions=ctx.pos,
         cache=ctx.plan_cache, cache_key=cache_key)

@@ -47,11 +47,12 @@ import jax
 import numpy as np
 
 from repro.channels.fading import ChannelModel
-from repro.channels.resources import ResourceLedger, spectral_efficiency
+from repro.channels.resources import (GAMMA_FLOOR, ResourceLedger,
+                                      spectral_efficiency)
 from repro.channels.topology import CellTopology
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
-from repro.core.diffusion import DiffusionPlanner, PlanCache
+from repro.core.diffusion import PLANNER_MODES, DiffusionPlanner, PlanCache
 from repro.core.schedule import charge_schedule
 from repro.fl.client import make_local_update
 from repro.fl.executors import EXECUTORS, make_executor
@@ -90,6 +91,8 @@ class FLConfig:
     max_diffusion_rounds: int | None = None
     eval_every: int = 1
     executor: str = "host"           # "host" (reference) | "fleet" (stacked)
+    planner: str = "host"            # control plane: "host" numpy oracle |
+                                     # "jax" jitted/batched device planner
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
     underlay: bool = False           # Appendix C-F (D2D reuses CUE PRBs)
 
@@ -142,6 +145,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
     assert cfg.executor in EXECUTORS, cfg.executor
+    assert cfg.planner in PLANNER_MODES, cfg.planner
     if cfg.num_models > cfg.num_clients:
         # The paper trains M ≤ N models (one PUE trains one model per round,
         # constraint 18d); the slot-per-client executors require it too.
@@ -158,7 +162,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     planner = DiffusionPlanner(topology, channel, auction,
                                epsilon=cfg.epsilon,
                                max_rounds=cfg.max_diffusion_rounds,
-                               underlay=cfg.underlay)
+                               underlay=cfg.underlay, mode=cfg.planner)
     if cfg.strategy in PROX_STRATEGIES:
         # proximal local solver (anchor = the received model's weights)
         from repro.fl.fedprox import make_prox_local_update
@@ -185,7 +189,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         else:
             ctrl_rng = rng
         pos = topology.sample_positions(ctrl_rng, n)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng), 0.05)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng),
+                              GAMMA_FLOOR)
 
         ctx = RoundContext(cfg=cfg, t=t, dsi=dsi, data_sizes=data_sizes,
                            pos=pos, rng=ctrl_rng, up_gamma=up_gamma,

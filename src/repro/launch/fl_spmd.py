@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.channels.fading import ChannelModel
-from repro.channels.resources import ResourceLedger
+from repro.channels.resources import GAMMA_FLOOR, ResourceLedger
 from repro.channels.topology import CellTopology
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core import aggregation as agg
@@ -107,7 +107,8 @@ def run_spmd_feddif(arch: str = "smollm_360m", clients: int = 4,
     for t in range(rounds):
         t0 = time.time()
         pos = topology.sample_positions(rng, clients)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, rng), 0.05)
+        up_gamma = np.maximum(_uplink_gamma(channel, pos, rng),
+                              GAMMA_FLOOR)
         ctx = RoundContext(cfg=fl_cfg, t=t, dsi=part.dsi,
                            data_sizes=part.data_sizes, pos=pos, rng=rng,
                            up_gamma=up_gamma, topology=topology,

@@ -41,6 +41,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--executor", choices=["host", "fleet"], default="host",
                     help="data plane per cell: host reference loop or "
                          "client-stacked fleet (FLConfig.executor)")
+    ap.add_argument("--planner", choices=["host", "jax"], default="host",
+                    help="control plane per cell: host numpy oracle or "
+                         "batched jax device planner that pre-plans the "
+                         "whole sweep in one device call (FLConfig.planner)")
     ap.add_argument("--out-dir", default=".",
                     help="artifact directory (default: CWD)")
     ap.add_argument("--list", action="store_true",
@@ -69,7 +73,7 @@ def main(argv: list[str] | None = None) -> int:
               f"seeds={list(seeds)}) ===", flush=True)
         artifact = run_sweep(name, smoke=smoke, seeds=seeds,
                              out_dir=args.out_dir, engine=args.engine,
-                             executor=args.executor,
+                             executor=args.executor, planner=args.planner,
                              log=lambda s: print(s, flush=True))
         pc = artifact["plan_cache"]
         print(f"# wrote {artifact['path']} "
