@@ -28,6 +28,7 @@ Paper artifacts covered:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -78,8 +79,7 @@ def _run_registry_sweep(bench_name: str, sweep_name: str, full: bool):
     """Drive one registry sweep; print per-cell CSV lines; write artifact."""
     from repro.experiments import run_sweep
     art = run_sweep(sweep_name, smoke=not full, seeds=(0,),
-                    out_dir="benchmarks/results", executor=EXECUTOR,
-                    planner=PLANNER)
+                    executor=EXECUTOR, planner=PLANNER)
     for c in art["cells"]:
         curve = np.mean(np.asarray(c["accuracy"]), axis=0)
         print(f"{bench_name},{c['label']},engine={c['engine']},"
@@ -149,11 +149,10 @@ def planner_speedup(full: bool):
     *equivalence* (identical round/hop counts and total Eq.-17 decrement —
     exact hop lists are reported but may differ on Eq.-38 ties) and emits
     BENCH_planner_speedup.json."""
-    import json
-    import os
     from repro.core import DiffusionPlanner, DiffusionState
     from repro.core.planner import (decode_plan, plan_round_inputs,
                                     plan_rounds_batched)
+    from repro.experiments.artifacts import write_bench_json
 
     n = m = 20
     c = 10
@@ -242,10 +241,7 @@ def planner_speedup(full: bool):
         "plans_equivalent": plans_equivalent,
         "total_hops": sum(len(p.hops) for p in host_plans),
     }
-    os.makedirs("benchmarks/results", exist_ok=True)
-    path = "benchmarks/results/BENCH_planner_speedup.json"
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2)
+    write_bench_json("planner_speedup", record)
     print(f"planner_speedup,cells={n_cells},clients={n},"
           f"host_s={host_s:.2f},jax_s={jax_s:.2f},"
           f"jax_cold_s={jax_cold_s:.2f},speedup={speedup:.2f}x,"
@@ -285,8 +281,98 @@ def executor_speedup(full: bool):
     fleet_t, fleet_r = rows["fleet"]
     assert host_r.ledger.as_dict() == fleet_r.ledger.as_dict(), \
         "executors must charge identical schedules"
-    print(f"executor_speedup,speedup={host_t / max(fleet_t, 1e-9):.2f}x,"
+    speedup = host_t / max(fleet_t, 1e-9)
+    from repro.experiments.artifacts import write_bench_json
+    write_bench_json("executor_speedup", {
+        "clients": clients, "rounds": rounds,
+        "host_s": host_t, "fleet_s": fleet_t, "speedup": speedup,
+        "ledger_identical": True,
+    })
+    print(f"executor_speedup,speedup={speedup:.2f}x,"
           f"ledger_identical=True", flush=True)
+
+
+def fleet_scaling(full: bool):
+    """Large-N data planes: ``fleet`` (single-device client-stacked vmap) vs
+    ``sharded`` (shard_map over a ``("clients",)`` mesh) at growing N, with
+    the ``host`` reference run at the smallest N for three-way bit-identical
+    ledger parity.  Schedules/ledgers are executor-independent by
+    construction, so the comparison signal is the **data plane's**
+    steady-state wall-clock — ``FLResult.round_wall_s`` with the first
+    (compile) round dropped; the shared host control plane (planner,
+    schedule build) is excluded by construction.  The task is the paper's
+    CNN: convolution-heavy sessions are where device-level client
+    parallelism beats a single device's intra-op threads.  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` for a K-device
+    CPU mesh (``main()`` forces K=2 when this bench runs standalone); on
+    one device the two planes are the same program and the speedup checks
+    are skipped (also skipped by the budget gate via ``device_count``).
+    Emits ``BENCH_fleet_scaling.json``.
+    """
+    import jax
+    from repro.experiments.artifacts import write_bench_json
+    from repro.fl import ExperimentSpec, FLConfig, run_experiment
+
+    n_devices = len(jax.devices())
+    sizes = (20, 64, 256) if full else (20, 64)
+    rounds = 4 if full else 3
+    cells, ledgers = [], {}
+    for n in sizes:
+        executors = ("host", "fleet", "sharded") if n == sizes[0] \
+            else ("fleet", "sharded")
+        for executor in executors:
+            # experiment.py trains on the test_frac side of the split, so
+            # this is ~40 train samples (2–3 batches) per client.
+            spec = ExperimentSpec(
+                task="cnn", alpha=0.5, num_samples=min(200 * n, 30000),
+                fl=FLConfig(strategy="feddif", rounds=rounds, num_clients=n,
+                            num_models=n, seed=0, topology_seed=0,
+                            max_diffusion_rounds=6, executor=executor))
+            t0 = time.time()
+            r = run_experiment(spec)
+            dt = time.time() - t0
+            steady = min(r.round_wall_s[1:])
+            ledgers[(n, executor)] = r.ledger.as_dict()
+            cells.append({"clients": n, "executor": executor,
+                          "wall_clock_s": dt, "round_s": steady,
+                          "acc": max(r.accuracy),
+                          "subframes": r.ledger.subframes})
+            print(f"fleet_scaling,clients={n},executor={executor},"
+                  f"sec={dt:.1f},round_s={steady:.2f},"
+                  f"acc={max(r.accuracy):.4f},"
+                  f"subframes={r.ledger.subframes}", flush=True)
+    n0 = sizes[0]
+    ledger_parity = (ledgers[(n0, "host")] == ledgers[(n0, "fleet")]
+                     == ledgers[(n0, "sharded")])
+    assert ledger_parity, "host/fleet/sharded must charge identical ledgers"
+    assert all(ledgers[(n, "fleet")] == ledgers[(n, "sharded")]
+               for n in sizes), "fleet/sharded ledgers must agree at every N"
+    by = {(c["clients"], c["executor"]): c["round_s"] for c in cells}
+    speedups = {n: by[(n, "fleet")] / max(by[(n, "sharded")], 1e-9)
+                for n in sizes}
+    big_n = max(n for n in sizes if n >= 64)
+    record = {
+        "device_count": n_devices, "sizes": list(sizes), "rounds": rounds,
+        "task": "cnn", "cells": cells, "ledger_parity": ledger_parity,
+        "speedup_by_n": {str(n): s for n, s in speedups.items()},
+        "speedup_at_scale": speedups[big_n], "scale_n": big_n,
+        "max_wall_clock_s": max(c["wall_clock_s"] for c in cells),
+    }
+    write_bench_json("fleet_scaling", record)
+    print(f"fleet_scaling,devices={n_devices},"
+          f"steady_speedup_n{big_n}={speedups[big_n]:.2f}x,"
+          f"ledger_parity={ledger_parity}", flush=True)
+    if speedups[big_n] <= 0.85 and n_devices > 1:
+        # check_budgets (benchmarks/budgets.json) is the regression gate;
+        # the in-bench hard failure is scoped to the topology the 0.85
+        # floor was calibrated on (forced 2-device CPU mesh) so a full
+        # suite run on exotic hardware reports instead of aborting the
+        # benches queued after this one.
+        msg = (f"sharded far behind fleet at N={big_n} on a "
+               f"{n_devices}-device mesh (got {speedups[big_n]:.2f}x)")
+        if n_devices == 2 and jax.default_backend() == "cpu":
+            raise AssertionError(msg)
+        print(f"fleet_scaling,WARNING,{msg}", flush=True)
 
 
 def kernels_microbench(full: bool):
@@ -379,8 +465,98 @@ def appendix_scenarios(full: bool):
 
 BENCHES = [fig2_convergence, fig3_alpha_sweep, fig4_epsilon_sweep,
            fig5_qos_sweep, fig6_tasks, table1_accuracy, table2_comm_eff,
-           planner_speedup, executor_speedup, appendix_scenarios,
-           kernels_microbench, roofline_summary]
+           planner_speedup, executor_speedup, fleet_scaling,
+           appendix_scenarios, kernels_microbench, roofline_summary]
+
+
+def check_budgets(budgets_path: str = "benchmarks/budgets.json") -> int:
+    """Perf-regression gate: compare every BENCH artifact named in
+    ``benchmarks/budgets.json`` against its budgeted metrics.
+
+    Budget schema — one entry per gate::
+
+        {"<gate>": {"artifact": "BENCH_x.json",
+                    "checks": [{"key": "a.b", "min": 1.0, "tolerance": 0.1},
+                               {"key": "flag", "equals": true},
+                               {"key": "speedup", "min": 1.0,
+                                "when": {"key": "device_count", "gte": 2}}]}}
+
+    ``min``/``max`` checks fail when the artifact value crosses the budget
+    beyond the relative ``tolerance`` (``value < min·(1−tol)`` resp.
+    ``value > max·(1+tol)``); ``equals`` checks are exact.  ``key`` is a
+    dotted path into the artifact JSON.  An optional ``when`` guard skips a
+    check unless another artifact field satisfies ``gte`` (e.g. speedup
+    gates only bind on multi-device artifacts).  A missing artifact is a
+    failure — the gate exists so CI cannot silently stop producing the
+    number.  Returns a process exit code (0 = within budget).
+    """
+    import json
+    from repro.experiments.artifacts import default_out_dir
+
+    def lookup(art, dotted):
+        value = art
+        for part in dotted.split("."):
+            value = value[part]
+        return value
+
+    with open(budgets_path) as f:
+        budgets = json.load(f)
+    failures = []
+    for gate, entry in sorted(budgets.items()):
+        path = os.path.join(default_out_dir(), entry["artifact"])
+        if not os.path.exists(path):
+            failures.append(f"{gate}: missing artifact {path} "
+                            f"(did the bench run?)")
+            continue
+        with open(path) as f:
+            art = json.load(f)
+        for chk in entry["checks"]:
+            cond = chk.get("when")
+            if cond is not None:
+                try:
+                    if not lookup(art, cond["key"]) >= cond["gte"]:
+                        print(f"budget_skip,{gate},{chk['key']},"
+                              f"{cond['key']}<{cond['gte']}", flush=True)
+                        continue
+                except (KeyError, TypeError):
+                    pass        # guard field absent: check applies
+            try:
+                value = lookup(art, chk["key"])
+            except (KeyError, TypeError):
+                failures.append(f"{gate}: key {chk['key']!r} missing "
+                                f"from {path}")
+                continue
+            tol = float(chk.get("tolerance", 0.0))
+            if "equals" in chk and value != chk["equals"]:
+                failures.append(f"{gate}: {chk['key']} == {value!r}, "
+                                f"budget requires {chk['equals']!r}")
+            elif "min" in chk and value < chk["min"] * (1.0 - tol):
+                failures.append(f"{gate}: {chk['key']} = {value:.4g} below "
+                                f"budget min {chk['min']}·(1−{tol})")
+            elif "max" in chk and value > chk["max"] * (1.0 + tol):
+                failures.append(f"{gate}: {chk['key']} = {value:.4g} above "
+                                f"budget max {chk['max']}·(1+{tol})")
+            else:
+                print(f"budget_ok,{gate},{chk['key']},{value}", flush=True)
+    for f_ in failures:
+        print(f"BUDGET REGRESSION: {f_}", flush=True)
+    print(f"# check_budgets: {len(failures)} violation(s)", flush=True)
+    return 1 if failures else 0
+
+
+def _force_cpu_mesh_for(bench_names: list) -> None:
+    """fleet_scaling needs >1 device to mean anything; force a 2-device CPU
+    mesh when it is the *only* selected bench (CI runs it standalone),
+    XLA_FLAGS has no explicit count yet, and jax has not been imported (the
+    flag is read at first import).  Full-suite runs are left on the real
+    device topology — forcing virtual devices there would time every other
+    bench under a configuration its budget was not calibrated for; the
+    speedup budget checks are gated on the artifact's ``device_count``."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if (bench_names == ["fleet_scaling"] and "jax" not in sys.modules
+            and "xla_force_host_platform_device_count" not in flags):
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=2").strip()
 
 
 def main() -> None:
@@ -388,18 +564,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--executor", choices=["host", "fleet"], default="host",
+    ap.add_argument("--executor", choices=["host", "fleet", "sharded"],
+                    default="host",
                     help="FL data plane for the figure/table benches "
-                         "(executor_speedup always compares both)")
+                         "(executor_speedup / fleet_scaling always compare)")
     ap.add_argument("--planner", choices=["host", "jax"], default="host",
                     help="FL control plane for the figure/table benches "
                          "(planner_speedup always compares both)")
+    ap.add_argument("--check-budgets", action="store_true",
+                    help="run no benches; gate existing BENCH artifacts "
+                         "against benchmarks/budgets.json and exit nonzero "
+                         "on regression")
     args = ap.parse_args()
+    if args.check_budgets:
+        raise SystemExit(check_budgets())
     EXECUTOR = args.executor
     PLANNER = args.planner
+    selected = [b.__name__ for b in BENCHES
+                if not args.only or args.only in b.__name__]
+    _force_cpu_mesh_for(selected)
     t0 = time.time()
     for bench in BENCHES:
-        if args.only and args.only not in bench.__name__:
+        if bench.__name__ not in selected:
             continue
         print(f"# === {bench.__name__} ===", flush=True)
         bench(args.full)

@@ -35,7 +35,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["WireEvent", "TrainOp", "PermuteOp", "MixOp", "RoundSchedule",
-           "complete_round_permutation", "charge_schedule"]
+           "complete_round_permutation", "charge_schedule", "apply_churn"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +182,42 @@ def complete_round_permutation(hops: list, slot_of_model: np.ndarray,
     new_slot_of_model = dst_of_src[slot_of_model]
     src_of_dst = np.argsort(dst_of_src)
     return src_of_dst, mask, new_slot_of_model
+
+
+def apply_churn(schedule: RoundSchedule, drop: np.ndarray) -> RoundSchedule:
+    """Straggler/churn dropout: dropped clients neither train nor aggregate.
+
+    ``drop`` is a (C,) bool mask of clients that fail to complete the round
+    (churned out of the cell, or stragglers the round deadline moves on
+    without).  The returned schedule
+
+    * clears the dropped slots from every Train/Permute ``train_mask`` (the
+      device never finishes its local session),
+    * removes their ``agg`` entries, so :meth:`RoundSchedule.slot_weights`
+      carries **zero aggregation weight** at dropped slots (the masked-psum
+      plane then reduces nothing from them), and
+    * leaves ``wire`` untouched: stragglers consumed their scheduled airtime
+      before missing the deadline, so the ledger still charges the full
+      schedule — identical for every executor.
+
+    If dropout would empty the aggregation entirely, the round is left
+    unchanged (the BS falls back to whatever arrives — no 0/0 global).
+    """
+    drop = np.asarray(drop, dtype=bool)
+    assert drop.shape == (schedule.num_slots,), drop.shape
+    agg2 = [(s, w) for s, w in schedule.agg if not drop[s]]
+    if not agg2 or not drop.any():
+        return schedule
+    ops2: list = []
+    for op in schedule.ops:
+        if isinstance(op, TrainOp):
+            ops2.append(TrainOp(op.train_mask & ~drop))
+        elif isinstance(op, PermuteOp):
+            ops2.append(dataclasses.replace(op,
+                                            train_mask=op.train_mask & ~drop))
+        else:
+            ops2.append(op)
+    return dataclasses.replace(schedule, ops=ops2, agg=agg2)
 
 
 def charge_schedule(ledger, schedule: RoundSchedule) -> None:

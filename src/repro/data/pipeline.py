@@ -24,20 +24,31 @@ class ClientLoader:
     _epoch: int = 0
 
     def num_batches(self) -> int:
+        if not len(self.y):      # empty shard: epoch() yields nothing
+            return 0
         return max(1, len(self.y) // self.batch_size)
 
     def epoch(self) -> Iterator[dict]:
+        if not len(self.y):      # empty shard: no local session this client
+            return
         rng = np.random.default_rng(self.seed + self._epoch)
         self._epoch += 1
         perm = rng.permutation(len(self.y))
         nb = self.num_batches()
         for i in range(nb):
             idx = perm[i * self.batch_size:(i + 1) * self.batch_size]
-            if len(idx) < self.batch_size:   # wrap-around pad
-                idx = np.concatenate([idx, perm[:self.batch_size - len(idx)]])
+            if len(idx) < self.batch_size:
+                # Cyclic wrap-around pad: every emitted batch has exactly
+                # batch_size rows even when the client's whole shard is
+                # smaller (large-N Dirichlet tails) — the stacked executors
+                # require rectangular per-step batches.
+                pad = np.resize(perm, self.batch_size - len(idx))
+                idx = np.concatenate([idx, pad])
             yield {"x": self.x[idx], "y": self.y[idx]}
 
     def one_batch(self) -> dict:
+        if not len(self.y):
+            raise ValueError("client shard is empty — no batch to draw")
         return next(self.epoch())
 
 

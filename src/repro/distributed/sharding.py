@@ -21,10 +21,27 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
-           "needs_fsdp", "named", "MODEL_AXIS", "DATA_AXIS"]
+           "needs_fsdp", "named", "client_stacked_specs", "client_shardings",
+           "MODEL_AXIS", "DATA_AXIS", "CLIENT_AXIS"]
 
 MODEL_AXIS = "model"
 DATA_AXIS = "data"
+CLIENT_AXIS = "clients"
+
+
+def client_stacked_specs(tree: Any) -> Any:
+    """PartitionSpec pytree for a *client-stacked* pytree: the leading client
+    axis of every leaf is sharded over :data:`CLIENT_AXIS`, everything else
+    replicated.  This is the spec family the sharded fleet executor and
+    ``repro.launch.fl_spmd --shard-clients`` use — per-client model shards
+    stay whole on their shard (FL clients are independent; only diffusion
+    hops and the Eq.-11 aggregation cross shards)."""
+    return jax.tree.map(lambda _: P(CLIENT_AXIS), tree)
+
+
+def client_shardings(mesh, tree: Any) -> Any:
+    """``NamedSharding`` pytree matching :func:`client_stacked_specs`."""
+    return named(mesh, client_stacked_specs(tree))
 
 # (regex on leaf path, spec factory(shape, fsdp) -> PartitionSpec)
 # First match wins.  `d` = the FSDP axis (None when fsdp disabled).

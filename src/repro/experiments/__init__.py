@@ -15,8 +15,9 @@ Public API:
 
 CLI: ``PYTHONPATH=src python -m repro.launch.sweep --sweep fig3_alpha --smoke``.
 """
-from repro.experiments.artifacts import (bench_path, build_artifact,
-                                         write_artifact)
+from repro.experiments.artifacts import (bench_file, bench_path,
+                                         build_artifact, default_out_dir,
+                                         write_artifact, write_bench_json)
 from repro.experiments.orchestrator import run_cell, run_sweep
 from repro.experiments.registry import (REGISTRY, SweepCell, SweepDef,
                                         expand_sweep, get_sweep, register,
@@ -30,5 +31,6 @@ __all__ = [
     "register", "sweep_names",
     "run_cell", "run_sweep",
     "SEED_VMAP_STRATEGIES", "run_replicates_loop", "run_replicates_vmapped",
-    "bench_path", "build_artifact", "write_artifact",
+    "bench_file", "bench_path", "build_artifact", "default_out_dir",
+    "write_artifact", "write_bench_json",
 ]

@@ -1,10 +1,18 @@
-"""Machine-readable sweep artifacts: ``BENCH_feddif_<sweep>.json``.
+"""Machine-readable benchmark artifacts: every ``BENCH_*.json`` in the repo.
 
-One artifact per sweep run, containing per-cell accuracy curves (per seed),
-the communication ledger (consumed sub-frames, transmitted models/bits, and
-the cumulative PUSCH bandwidth of Eq. 15 in Hz·s), wall-clock, and
-plan-cache statistics.  The schema is versioned so downstream trend tooling
-can evolve without guessing.
+One artifact per sweep run (``BENCH_feddif_<sweep>.json``) containing
+per-cell accuracy curves (per seed), the communication ledger (consumed
+sub-frames, transmitted models/bits, and the cumulative PUSCH bandwidth of
+Eq. 15 in Hz·s), wall-clock, and plan-cache statistics; plus one per perf
+bench (``BENCH_planner_speedup.json``, ``BENCH_executor_speedup.json``,
+``BENCH_fleet_scaling.json``).  The schema is versioned so downstream trend
+tooling can evolve without guessing.
+
+This module is also the **single artifact-location authority**: every
+producer (the ``repro.launch.sweep`` CLI, ``benchmarks/run.py``, the
+orchestrator) resolves its output directory through :func:`default_out_dir`
+— ``$REPRO_BENCH_DIR`` or ``benchmarks/results/`` — so CI's ``test -f`` /
+upload globs and the budget gate read from exactly one place.
 """
 from __future__ import annotations
 
@@ -15,14 +23,43 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["SCHEMA_VERSION", "bench_path", "build_artifact",
-           "write_artifact", "summarize_curves"]
+__all__ = ["SCHEMA_VERSION", "DEFAULT_OUT_DIR", "default_out_dir",
+           "bench_file", "bench_path", "build_artifact", "write_artifact",
+           "write_bench_json", "summarize_curves"]
 
 SCHEMA_VERSION = 1
 
+# Resolved relative to the process CWD (the repo root for every entry point).
+DEFAULT_OUT_DIR = os.path.join("benchmarks", "results")
 
-def bench_path(sweep: str, out_dir: str = ".") -> str:
-    return os.path.join(out_dir, f"BENCH_feddif_{sweep}.json")
+
+def default_out_dir() -> str:
+    """The one BENCH artifact directory: ``$REPRO_BENCH_DIR`` override or
+    ``benchmarks/results/``."""
+    return os.environ.get("REPRO_BENCH_DIR", DEFAULT_OUT_DIR)
+
+
+def bench_file(name: str, out_dir: str | None = None) -> str:
+    """Path of ``BENCH_<name>.json`` under the (default) artifact dir."""
+    return os.path.join(default_out_dir() if out_dir is None else out_dir,
+                        f"BENCH_{name}.json")
+
+
+def bench_path(sweep: str, out_dir: str | None = None) -> str:
+    """Path of a sweep artifact, ``BENCH_feddif_<sweep>.json``."""
+    return bench_file(f"feddif_{sweep}", out_dir)
+
+
+def write_bench_json(name: str, record: dict,
+                     out_dir: str | None = None) -> str:
+    """Write a non-sweep bench record to ``BENCH_<name>.json``; returns the
+    path (perf benches: planner_speedup / executor_speedup / fleet_scaling).
+    """
+    path = bench_file(name, out_dir)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=_json_default)
+    return path
 
 
 def summarize_curves(curves: list[list[float]]) -> dict:
@@ -67,8 +104,9 @@ def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
     }
 
 
-def write_artifact(artifact: dict, out_dir: str = ".") -> str:
+def write_artifact(artifact: dict, out_dir: str | None = None) -> str:
     """Write ``BENCH_feddif_<sweep>.json``; returns the path."""
+    out_dir = default_out_dir() if out_dir is None else out_dir
     os.makedirs(out_dir, exist_ok=True)
     path = bench_path(artifact["sweep"], out_dir)
     with open(path, "w") as f:

@@ -134,10 +134,16 @@ def prepopulate_plan_cache(cells: Sequence[SweepCell], cache: PlanCache
 
 
 def _pick_engine(cell: SweepCell, engine: str) -> str:
-    if cell.spec.fl.executor == "fleet":
-        # The fleet executor already vmaps the *client* axis; replicate seeds
-        # run on the loop engine (the seed_vmap engine is its own host-side
-        # seed-stacked data plane and would bypass the executor seam).
+    if cell.spec.fl.executor in ("fleet", "sharded"):
+        # These executors already vmap/shard the *client* axis; replicate
+        # seeds run on the loop engine (the seed_vmap engine is its own
+        # host-side seed-stacked data plane and would bypass the executor
+        # seam).
+        return "loop"
+    if cell.spec.fl.churn_rate > 0.0:
+        # Churn masks are applied schedule-side in run_federated; the
+        # seed_vmap engine hand-rolls fedavg/feddif rounds and would skip
+        # them.
         return "loop"
     if engine == "auto":
         return ("seed_vmap" if cell.strategy in SEED_VMAP_STRATEGIES
@@ -203,7 +209,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
 
 
 def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
-              out_dir: str | None = ".", engine: str = "auto",
+              out_dir: str | None = "auto", engine: str = "auto",
               executor: str = "host", planner: str = "host",
               plan_cache: PlanCache | None = None,
               log=None, **spec_overrides) -> dict:
@@ -213,11 +219,15 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
       name: registry key (``fig3_alpha`` … ``table2_strategies``).
       smoke: smoke-sized grid (CPU-minutes) vs full grid.
       seeds: replicate seeds; curves are reported per seed.
-      out_dir: where ``BENCH_feddif_<name>.json`` is written; ``None``
-        skips writing (used by tests and by callers composing artifacts).
+      out_dir: where ``BENCH_feddif_<name>.json`` is written; the default
+        ``"auto"`` resolves through
+        :func:`repro.experiments.artifacts.default_out_dir` (the single
+        artifact directory CI globs); ``None`` skips writing (used by tests
+        and by callers composing artifacts).
       engine: replication engine, see :func:`run_cell`.
       executor: ``FLConfig.executor`` stamped on every cell — ``"host"``
-        reference loop or ``"fleet"`` client-stacked data plane.
+        reference loop, ``"fleet"`` client-stacked data plane, or
+        ``"sharded"`` client-sharded mesh plane.
       planner: ``FLConfig.planner`` stamped on every cell — ``"host"``
         numpy control plane or ``"jax"`` device planner.  With ``"jax"``
         the whole sweep's diffusion plans are computed up front in batched
@@ -258,5 +268,7 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
         planner=planner, plan_cache_stats=cache.stats(),
         wall_clock_s=time.time() - t0)
     if out_dir is not None:
+        if out_dir == "auto":
+            out_dir = artifacts.default_out_dir()
         artifact["path"] = artifacts.write_artifact(artifact, out_dir)
     return artifact

@@ -18,6 +18,7 @@ name                paper artifact           axis
 ``fig5_gamma_min``  Fig. 5                   min spectral efficiency γ_min
 ``fig6_tasks``      Fig. 6 / Table I         ML task (logistic…cnn)
 ``table2_strategies``  Table II              strategy (FedAvg…FedDif)
+``fig7_scaling``    scaling (beyond paper)   client population N (with churn)
 ==================  =======================  ==================================
 
 Consumers must not hand-roll their own grids: ``benchmarks/run.py`` and the
@@ -43,6 +44,7 @@ AXIS_TARGETS = {
     "gamma_min": ("fl", "gamma_min"),
     "task": ("spec", "task"),
     "strategy": ("fl", "strategy"),
+    "num_clients": ("fl", "num_clients"),   # num_models tracks it (M = N)
 }
 
 
@@ -94,8 +96,9 @@ class SweepDef:
             diffusion plans are shareable across replicate seeds (see
             ``FLConfig.topology_seed``).
           executor: data plane stamped on every cell — ``"host"`` (per-slot
-            reference loop) or ``"fleet"`` (client-stacked vmap); see
-            ``FLConfig.executor``.
+            reference loop), ``"fleet"`` (client-stacked vmap) or
+            ``"sharded"`` (client axis sharded over a ``("clients",)``
+            mesh); see ``FLConfig.executor``.
           planner: control plane stamped on every cell — ``"host"`` numpy
             oracle or ``"jax"`` batched device planner; see
             ``FLConfig.planner``.
@@ -123,6 +126,9 @@ class SweepDef:
                 where, field = AXIS_TARGETS[self.axis]
                 if where == "fl":
                     fl_kwargs[field] = value
+                    if field == "num_clients":
+                        # The paper trains M ≤ N; scaling sweeps keep M = N.
+                        fl_kwargs["num_models"] = value
                 elif field != "strategy":
                     spec_kwargs[field] = value
                 spec_kwargs.update(overrides)
@@ -216,6 +222,24 @@ register(SweepDef(
     values=TASK_MODELS,
     smoke_values=("logistic", "fcn"),
     strategies=("fedavg", "feddif"),
+))
+
+register(SweepDef(
+    name="fig7_scaling",
+    figure="Scaling (beyond paper)",
+    axis="num_clients",
+    description="Large-N fleet scaling: client population N (M = N models) "
+                "× strategy under per-round churn/straggler dropout — the "
+                "regime the sharded executor targets (run with "
+                "--executor sharded).",
+    values=(20, 64, 256),
+    smoke_values=(20, 64),
+    strategies=("fedavg", "d2d_random_walk", "feddif"),
+    rounds=6,
+    smoke_rounds=2,
+    num_samples=25600,
+    smoke_num_samples=6400,
+    fl_overrides={"churn_rate": 0.05, "max_diffusion_rounds": 8},
 ))
 
 register(SweepDef(

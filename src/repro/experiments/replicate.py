@@ -119,6 +119,9 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     if cfg.topology_seed is None:
         raise ValueError("seed-vmapped replication needs fl.topology_seed "
                          "(control plane must not depend on the model seed)")
+    if cfg.churn_rate > 0.0:
+        raise ValueError("seed-vmapped replication does not model churn "
+                         "(fl.churn_rate > 0); use run_replicates_loop")
     seeds = [int(s) for s in seeds]
 
     # ---- data / model setup (identical to run_experiment, done once) -----

@@ -3,6 +3,7 @@ from repro.fl.client import make_local_update, local_update
 from repro.fl.compression import stc_compress, compressed_bits
 from repro.fl.server import FLConfig, FLResult, run_federated, STRATEGIES
 from repro.fl.schedulers import SCHEDULERS, RoundContext
-from repro.fl.executors import EXECUTORS, FleetExecutor, HostExecutor
+from repro.fl.executors import (EXECUTORS, FleetExecutor, HostExecutor,
+                                ShardedFleetExecutor)
 from repro.fl.fedprox import make_prox_local_update
 from repro.fl.experiment import ExperimentSpec, run_experiment

@@ -20,8 +20,21 @@ Two data planes consume the same schedule object:
   instead of O(Σ client batches) — which is what lets sweeps scale past
   paper-sized fleets.
 
-Ledger charging lives in neither: :func:`~repro.core.schedule
-.charge_schedule` replays the schedule's wire events, so both executors
+* :class:`ShardedFleetExecutor` — the large-N plane.  The stacked pytree's
+  leading client axis is *sharded* over a 1-D ``("clients",)`` mesh
+  (:func:`repro.launch.mesh.make_clients_mesh`,
+  :func:`repro.distributed.sharding.client_stacked_specs`) with
+  ``shard_map``: local sessions run client-parallel across devices with the
+  per-shard block further **microbatched** (``lax.map`` over chunks of
+  ``FLConfig.shard_microbatch`` clients) so N=256–1024 fleets fit in
+  memory; a :class:`~repro.core.schedule.PermuteOp` becomes a sharded
+  permutation collective (static routing tables + per-shift
+  ``lax.ppermute``); a :class:`~repro.core.schedule.MixOp` is a
+  ``psum_scatter``; Eq.-11 aggregation is a masked ``psum`` over the client
+  axis.  On a 1-device mesh it degenerates to the fleet program.
+
+Ledger charging lives in none of them: :func:`~repro.core.schedule
+.charge_schedule` replays the schedule's wire events, so all executors
 report identical communication metrics by construction.
 """
 from __future__ import annotations
@@ -33,19 +46,23 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core.schedule import MixOp, PermuteOp, RoundSchedule, TrainOp
 from repro.distributed.fedshard import diffuse_params, masked_stc_compress
+from repro.distributed.sharding import CLIENT_AXIS
 from repro.fl.compression import stc_compress
 from repro.fl.schedulers import PROX_STRATEGIES
 from repro.train import optimizer as opt_lib
 
 Params = Any
 
-__all__ = ["HostExecutor", "FleetExecutor", "make_executor", "EXECUTORS"]
+__all__ = ["HostExecutor", "FleetExecutor", "ShardedFleetExecutor",
+           "make_executor", "EXECUTORS"]
 
-EXECUTORS = ("host", "fleet")
+EXECUTORS = ("host", "fleet", "sharded")
 
 
 def _tree_sub(a, b):
@@ -138,6 +155,7 @@ class FleetExecutor:
             return (jax.tree.map(sel, p2, p),
                     jax.tree.map(sel, new_state["mu"], mom), loss)
 
+        self._one = one          # per-client step; ShardedFleetExecutor remaps
         self._step = jax.jit(jax.vmap(one))
 
     # ---------------------------------------------------------------- batches
@@ -176,6 +194,35 @@ class FleetExecutor:
             params, mom, _ = self._step(params, mom, batch, active, anchor)
         return params
 
+    # ----------------------------------------------- overridable primitives
+    # One round structure (run_round below), two placements:
+    # ShardedFleetExecutor overrides exactly these five hooks with its
+    # collective twins, so a new op kind or agg mode is added in one place.
+
+    def _broadcast(self, global_params: Params, num_slots: int) -> Params:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_slots,) + x.shape),
+            global_params)
+
+    def _permute(self, params: Params, op: PermuteOp) -> Params:
+        return diffuse_params(params, jnp.asarray(op.src_of_dst))
+
+    def _mix(self, params: Params, op: MixOp, num_slots: int) -> Params:
+        w = jnp.asarray(op.matrix(num_slots))
+        return jax.tree.map(
+            lambda x: jnp.einsum("ij,j...->i...", w,
+                                 x.astype(jnp.float32)).astype(x.dtype),
+            params)
+
+    def _masked_stc(self, params: Params, ref: Params, mask: np.ndarray,
+                    sparsity: float) -> Params:
+        return masked_stc_compress(params, ref, jnp.asarray(mask), sparsity)
+
+    def _aggregate(self, payload: Params, w: jax.Array) -> Params:
+        return jax.tree.map(
+            lambda x: jnp.tensordot(w, x.astype(jnp.float32),
+                                    axes=(0, 0)).astype(x.dtype), payload)
+
     # ------------------------------------------------------------------ round
 
     def run_round(self, sched: RoundSchedule, global_params: Params,
@@ -184,40 +231,216 @@ class FleetExecutor:
         if sched.persistent and slots is not None:
             params = slots
         else:
-            params = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (c_slots,) + x.shape),
-                global_params)
+            params = self._broadcast(global_params, c_slots)
         ref = global_params
         for op in sched.ops:
             if isinstance(op, TrainOp):
                 params = self._session(params, op.train_mask)
             elif isinstance(op, PermuteOp):
                 if op.compress:
-                    params = masked_stc_compress(
-                        params, ref, jnp.asarray(op.compress_src_mask()),
-                        sched.stc_sparsity)
-                params = diffuse_params(params,
-                                        jnp.asarray(op.src_of_dst))
+                    params = self._masked_stc(params, ref,
+                                              op.compress_src_mask(),
+                                              sched.stc_sparsity)
+                params = self._permute(params, op)
                 params = self._session(params, op.train_mask)
             elif isinstance(op, MixOp):
-                w = jnp.asarray(op.matrix(c_slots))
-                params = jax.tree.map(
-                    lambda x: jnp.einsum(
-                        "ij,j...->i...", w,
-                        x.astype(jnp.float32)).astype(x.dtype), params)
+                params = self._mix(params, op, c_slots)
             else:
                 raise TypeError(f"unknown op {type(op).__name__}")
         wvec = sched.slot_weights()
         w = jnp.asarray((wvec / wvec.sum()).astype(np.float32))
         if sched.agg_mode == "stc_delta":
-            payload = masked_stc_compress(
-                params, ref, jnp.asarray(wvec > 0), sched.stc_sparsity)
+            payload = self._masked_stc(params, ref, wvec > 0,
+                                       sched.stc_sparsity)
         else:
             payload = params
-        new_global = jax.tree.map(
-            lambda x: jnp.tensordot(w, x.astype(jnp.float32),
-                                    axes=(0, 0)).astype(x.dtype), payload)
+        new_global = self._aggregate(payload, w)
         return new_global, (params if sched.persistent else None)
+
+
+def _permutation_tables(src_of_dst: np.ndarray, num_shards: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Static routing tables for a slot bijection on a ``num_shards`` mesh.
+
+    The global permutation ``new[c] = old[src_of_dst[c]]`` is decomposed into
+    ``num_shards`` ring shifts: rows moving from shard ``s`` to shard
+    ``(s + shift) % K`` travel together in one ``ppermute`` step.  Returns
+
+    * ``send[s, shift, i]`` — local row index the *source* shard ``s`` packs
+      at buffer position ``i`` for shift ``shift`` (0-padded), and
+    * ``recv[d, shift, i]`` — local row index where the *destination* shard
+      ``d`` scatters buffer position ``i`` (padded with ``n_local``, a trash
+      row dropped after the scatter).
+
+    Packing order ``i`` is shared between the two tables because a
+    ``(shift, src)`` pair determines the destination shard uniquely.  The
+    tables are data, not code: one compiled collective serves every
+    permutation of a round without retracing.
+    """
+    perm = np.asarray(src_of_dst, np.int64)
+    c = perm.shape[0]
+    k = num_shards
+    assert c % k == 0, (c, k)
+    nl = c // k
+    send = np.zeros((k, k, nl), np.int32)
+    recv = np.full((k, k, nl), nl, np.int32)
+    fill = np.zeros((k, k), np.int32)
+    for dst in range(c):
+        src = int(perm[dst])
+        s, d = src // nl, dst // nl
+        shift = (d - s) % k
+        i = int(fill[shift, s])
+        fill[shift, s] = i + 1
+        send[s, shift, i] = src % nl
+        recv[d, shift, i] = dst % nl
+    return send, recv
+
+
+class ShardedFleetExecutor(FleetExecutor):
+    """Client-sharded execution over a ``("clients",)`` mesh axis.
+
+    Same math as :class:`FleetExecutor` (it reuses the per-client step and
+    the host-side batch streams verbatim); the difference is placement: the
+    leading client axis of every pytree leaf lives sharded across the mesh,
+    sessions are ``shard_map``-ped so each device trains only its block of
+    clients — microbatched in chunks of ``FLConfig.shard_microbatch`` so
+    device memory is O(microbatch), not O(N) — and cross-client ops are
+    explicit collectives (``ppermute`` hops, ``psum_scatter`` mixes, masked
+    ``psum`` aggregation).
+    """
+
+    def __init__(self, loss_fn: Callable,
+                 client_batches: Sequence[Callable], cfg,
+                 clip: float | None = 10.0, mesh=None):
+        super().__init__(loss_fn, client_batches, cfg, clip)
+        from repro.launch.mesh import make_clients_mesh
+        c = cfg.num_clients
+        self.mesh = mesh if mesh is not None else make_clients_mesh(c)
+        self.k = int(self.mesh.shape[CLIENT_AXIS])
+        assert c % self.k == 0, (c, self.k)
+        self.nl = c // self.k
+        mb_cap = max(1, int(getattr(cfg, "shard_microbatch", 32)))
+        self.mb = max(b for b in range(1, min(mb_cap, self.nl) + 1)
+                      if self.nl % b == 0)
+        self.nchunks = self.nl // self.mb
+        self._stc_cache: dict = {}
+        self._build()
+
+    # ------------------------------------------------------- compiled planes
+
+    def _shmap(self, f, in_specs, out_specs):
+        return jax.jit(shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False))
+
+    def _build(self) -> None:
+        pc = P(CLIENT_AXIS)
+        k, nl, nchunks, mb = self.k, self.nl, self.nchunks, self.mb
+        vstep = jax.vmap(self._one)
+
+        def chunked_session_step(p, mom, batch, active, anchor):
+            # Local block of nl clients, trained in nchunks microbatches so
+            # activations/grads are O(mb) per device, not O(N).
+            args = (p, mom, batch, active, anchor)
+            if nchunks == 1:
+                return vstep(*args)
+            split = jax.tree.map(
+                lambda x: x.reshape((nchunks, mb) + x.shape[1:]), args)
+            out = jax.lax.map(lambda a: vstep(*a), split)
+            return jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), out)
+
+        # Overrides FleetExecutor._step: _session() is inherited unchanged.
+        self._step = self._shmap(chunked_session_step,
+                                 in_specs=(pc, pc, pc, pc, pc),
+                                 out_specs=(pc, pc, pc))
+
+        def permute_leaf(x, send, recv):
+            out = jnp.zeros((nl + 1,) + x.shape[1:], x.dtype)
+            for shift in range(k):
+                buf = jnp.take(x, send[shift], axis=0)
+                if shift:
+                    buf = jax.lax.ppermute(
+                        buf, CLIENT_AXIS,
+                        [(s, (s + shift) % k) for s in range(k)])
+                out = out.at[recv[shift]].set(buf)
+            return out[:nl]
+
+        def permute_tree(params, send, recv):
+            send, recv = send[0], recv[0]      # (1, k, nl) local -> (k, nl)
+            return jax.tree.map(
+                lambda x: permute_leaf(x, send, recv), params)
+
+        self._sh_permute = self._shmap(permute_tree,
+                                       in_specs=(pc, pc, pc), out_specs=pc)
+
+        def mix_tree(params, wt_local):
+            # wt_local: this shard's (nl, C) block of Wᵀ — partial products
+            # over local source slots, reduced+scattered back to slot owners.
+            def leaf(x):
+                part = jnp.einsum("jc,j...->c...", wt_local,
+                                  x.astype(jnp.float32))
+                out = jax.lax.psum_scatter(part, CLIENT_AXIS,
+                                           scatter_dimension=0, tiled=True)
+                return out.astype(x.dtype)
+            return jax.tree.map(leaf, params)
+
+        self._sh_mix = self._shmap(mix_tree, in_specs=(pc, pc), out_specs=pc)
+
+        def agg_tree(payload, w_local):
+            # Eq. (11) as a masked psum: dropped/churned slots carry zero
+            # weight, so their shard contributes nothing to the reduction.
+            def leaf(x):
+                part = jnp.tensordot(w_local, x.astype(jnp.float32),
+                                     axes=(0, 0))
+                return jax.lax.psum(part, CLIENT_AXIS).astype(x.dtype)
+            return jax.tree.map(leaf, payload)
+
+        self._sh_agg = self._shmap(agg_tree, in_specs=(pc, pc), out_specs=P())
+
+        def bcast_tree(g):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (nl,) + x.shape), g)
+
+        self._sh_bcast = self._shmap(bcast_tree, in_specs=P(), out_specs=pc)
+
+    def _sh_stc(self, sparsity: float):
+        fn = self._stc_cache.get(sparsity)
+        if fn is None:
+            def stc_tree(params, ref, mask):
+                return masked_stc_compress(params, ref, mask, sparsity)
+            fn = self._shmap(stc_tree, in_specs=(P(CLIENT_AXIS), P(),
+                                                 P(CLIENT_AXIS)),
+                             out_specs=P(CLIENT_AXIS))
+            self._stc_cache[sparsity] = fn
+        return fn
+
+    # ------------------------- primitive overrides (round loop inherited)
+
+    def _broadcast(self, global_params: Params, num_slots: int) -> Params:
+        return self._sh_bcast(global_params)
+
+    def _permute(self, params: Params, op: PermuteOp) -> Params:
+        send, recv = _permutation_tables(op.src_of_dst, self.k)
+        return self._sh_permute(params, jnp.asarray(send),
+                                jnp.asarray(recv))
+
+    def _mix(self, params: Params, op: MixOp, num_slots: int) -> Params:
+        wt = np.ascontiguousarray(op.matrix(num_slots).T)
+        return self._sh_mix(params, jnp.asarray(wt))
+
+    def _masked_stc(self, params: Params, ref: Params, mask: np.ndarray,
+                    sparsity: float) -> Params:
+        return self._sh_stc(sparsity)(params, ref, jnp.asarray(mask))
+
+    def _aggregate(self, payload: Params, w: jax.Array) -> Params:
+        return self._sh_agg(payload, w)
+
+    def run_round(self, sched: RoundSchedule, global_params: Params,
+                  slots: Params | None) -> tuple[Params, Params | None]:
+        # The mesh/tables were built for cfg.num_clients slots.
+        assert sched.num_slots == self.cfg.num_clients, \
+            (sched.num_slots, self.cfg.num_clients)
+        return super().run_round(sched, global_params, slots)
 
 
 def make_executor(name: str, loss_fn: Callable, local_update: Callable,
@@ -227,5 +450,7 @@ def make_executor(name: str, loss_fn: Callable, local_update: Callable,
         return HostExecutor(local_update, client_batches, cfg)
     if name == "fleet":
         return FleetExecutor(loss_fn, client_batches, cfg)
+    if name == "sharded":
+        return ShardedFleetExecutor(loss_fn, client_batches, cfg)
     raise ValueError(f"unknown executor {name!r}; expected one of "
                      f"{EXECUTORS}")

@@ -27,10 +27,12 @@ from repro.channels.topology import CellTopology
 from repro.core.diffusion import DiffusionPlanner, PlanCache, feddif_cache_key
 from repro.core.dol import DiffusionState, iid_distance
 from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule, TrainOp,
-                                 WireEvent, complete_round_permutation)
+                                 WireEvent, apply_churn,
+                                 complete_round_permutation)
 from repro.fl.compression import compressed_bits
 
-__all__ = ["RoundContext", "SCHEDULERS", "PROX_STRATEGIES", "GAMMA_FLOOR"]
+__all__ = ["RoundContext", "SCHEDULERS", "PROX_STRATEGIES", "GAMMA_FLOOR",
+           "apply_round_churn"]
 
 # Strategies whose local solver is the FedProx proximal step.
 PROX_STRATEGIES = ("fedprox", "feddif_prox")
@@ -88,6 +90,37 @@ def _pair_gamma(ctx: RoundContext) -> np.ndarray:
     """One D2D channel draw over the round's positions (Sec. III-D)."""
     gains = ctx.channel.sample_gains(ctx.pair_distances(), ctx.rng)
     return spectral_efficiency(ctx.channel.snr(gains))
+
+
+# Stream tag separating the churn draw from every other [seed, t] consumer.
+_CHURN_STREAM = 0xC4
+
+
+def apply_round_churn(ctx: RoundContext,
+                      schedule: RoundSchedule) -> RoundSchedule:
+    """Draw this round's churn/straggler mask and apply it to the schedule.
+
+    Lives with the schedulers because it extends the determinism contract:
+    the mask comes from a **dedicated** RNG stream keyed on
+    ``[topology_seed (or seed), t, _CHURN_STREAM]`` — *not* from the tail
+    of ``ctx.rng``, whose post-scheduler position depends on plan-cache
+    hits and on the planner mode (a cache hit skips the channel draws a
+    miss consumes).  A given config therefore drops the same clients in
+    round ``t`` no matter which executor/planner/engine runs it or what
+    the shared cache already contains; ``churn_rate=0`` draws nothing and
+    existing trajectories are bit-identical.  Each client independently
+    drops with probability ``FLConfig.churn_rate``; see
+    :func:`~repro.core.schedule.apply_churn` for the dropped-client
+    semantics (no training, zero aggregation weight, wire still charged).
+    """
+    rate = float(getattr(ctx.cfg, "churn_rate", 0.0))
+    if rate <= 0.0:
+        return schedule
+    seed = (ctx.cfg.topology_seed if ctx.cfg.topology_seed is not None
+            else ctx.cfg.seed)
+    rng = np.random.default_rng([seed, ctx.t, _CHURN_STREAM])
+    drop = rng.random(ctx.cfg.num_clients) < rate
+    return apply_churn(schedule, drop)
 
 
 # ----------------------------------------------------------------- schedulers

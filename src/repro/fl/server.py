@@ -20,7 +20,12 @@ in three strategy-agnostic stages, mirroring the paper's PUCCH/PUSCH split:
    for every executor.
 3. **execute** — the executor selected by ``cfg.executor`` runs the ops:
    ``"host"`` on a per-slot pytree list (the reference semantics), ``"fleet"``
-   on one client-stacked pytree via vmapped/jitted fedshard steps. [PUSCH]
+   on one client-stacked pytree via vmapped/jitted fedshard steps, and
+   ``"sharded"`` with that client axis sharded over a ``("clients",)`` mesh
+   (shard_map sessions, collective hops/aggregation — the large-N plane).
+   When ``cfg.churn_rate > 0``, a per-round dropout mask is applied to the
+   schedule first (``apply_round_churn``): dropped clients neither train nor
+   carry aggregation weight, while their wire events still charge. [PUSCH]
 
 Adding a strategy therefore means: append its name to :data:`STRATEGIES` and
 write one scheduler in ``repro.fl.schedulers`` — both executors, the ledger,
@@ -41,6 +46,7 @@ once per sweep cell and replay the plan across replicate seeds.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -56,7 +62,8 @@ from repro.core.diffusion import PLANNER_MODES, DiffusionPlanner, PlanCache
 from repro.core.schedule import charge_schedule
 from repro.fl.client import make_local_update
 from repro.fl.executors import EXECUTORS, make_executor
-from repro.fl.schedulers import PROX_STRATEGIES, SCHEDULERS, RoundContext
+from repro.fl.schedulers import (PROX_STRATEGIES, SCHEDULERS, RoundContext,
+                                 apply_round_churn)
 
 Params = Any
 
@@ -91,6 +98,11 @@ class FLConfig:
     max_diffusion_rounds: int | None = None
     eval_every: int = 1
     executor: str = "host"           # "host" (reference) | "fleet" (stacked)
+                                     # | "sharded" (client-sharded mesh)
+    shard_microbatch: int = 32       # clients per device microbatch when
+                                     # executor="sharded" (caps memory)
+    churn_rate: float = 0.0          # per-round P(client drops out) — see
+                                     # schedulers.apply_round_churn
     planner: str = "host"            # control plane: "host" numpy oracle |
                                      # "jax" jitted/batched device planner
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
@@ -106,6 +118,11 @@ class FLResult:
     iid_distance: list[float]
     config: FLConfig
     final_params: Params = None
+    # Data-plane wall-clock per communication round (executor.run_round,
+    # synced on the aggregated global) — the executor-comparison signal
+    # benchmarks/run.py fleet_scaling gates on.  Empty for engines that
+    # bypass run_federated (seed_vmap replication).
+    round_wall_s: list = dataclasses.field(default_factory=list)
 
     def rounds_to_accuracy(self, target: float) -> int | None:
         for i, a in enumerate(self.accuracy):
@@ -179,6 +196,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     auction.model_bits = model_bits
 
     acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
+    round_wall: list[float] = []
     slots = None            # persistent per-slot state (gossip / tthf)
 
     for t in range(cfg.rounds):
@@ -199,9 +217,13 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                            param_template=global_params,
                            plan_cache=plan_cache)
         schedule = SCHEDULERS[cfg.strategy](ctx)
+        schedule = apply_round_churn(ctx, schedule)
         charge_schedule(ledger, schedule)
+        t_exec = time.time()
         global_params, slots = executor.run_round(schedule, global_params,
                                                   slots)
+        jax.block_until_ready(global_params)
+        round_wall.append(time.time() - t_exec)
         dif_hist.append(schedule.diffusion_rounds)
         iid_hist.append(schedule.mean_iid)
 
@@ -212,4 +234,5 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
 
     return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
                     diffusion_rounds=dif_hist, iid_distance=iid_hist,
-                    config=cfg, final_params=global_params)
+                    config=cfg, final_params=global_params,
+                    round_wall_s=round_wall)

@@ -3,8 +3,15 @@ pure-jnp oracle (ref.py) elsewhere — the dry-run path lowers the oracle
 because Pallas-TPU cannot compile on a CPU backend (DESIGN.md §2).
 
 ``implementation`` ∈ {"auto", "pallas", "pallas_interpret", "xla"}.
+
+The ``REPRO_KERNELS_IMPL`` environment variable overrides what ``"auto"``
+resolves to (explicit ``implementation=`` arguments always win).  CI's
+``pallas-interpret`` job sets it to ``pallas_interpret`` so the Pallas
+kernel bodies — not just the XLA fallbacks — are exercised on CPU runners.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +27,13 @@ __all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan"]
 def _resolve(implementation: str) -> str:
     if implementation != "auto":
         return implementation
+    forced = os.environ.get("REPRO_KERNELS_IMPL", "")
+    if forced:
+        if forced not in ("pallas", "pallas_interpret", "xla"):
+            raise ValueError(
+                f"REPRO_KERNELS_IMPL={forced!r}: expected pallas, "
+                f"pallas_interpret or xla")
+        return forced
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 

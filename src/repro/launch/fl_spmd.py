@@ -13,9 +13,17 @@ metrics.
 
 On a pod, the client axis is a real mesh axis (``data`` on-pod for
 paper-scale fleets, ``pod`` across pods — see fedshard); on this CPU host
-it runs on the 1-device mesh, which is the same program.
+it runs on the 1-device mesh, which is the same program.  With
+``--shard-clients`` the stacked TrainState and batches are placed with
+``NamedSharding`` over a ``("clients",)`` mesh
+(:func:`repro.launch.mesh.make_clients_mesh` /
+:func:`repro.distributed.sharding.client_shardings`) so GSPMD partitions
+every jitted step across devices — the same client-sharded plane the
+``sharded`` FL executor uses, here on LM fleets.
 
     PYTHONPATH=src python -m repro.launch.fl_spmd --clients 4 --rounds 3
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m repro.launch.fl_spmd --clients 4 --shard-clients
 """
 from __future__ import annotations
 
@@ -60,12 +68,21 @@ def _stack_states(model, opt, key, n):
 def run_spmd_feddif(arch: str = "smollm_360m", clients: int = 4,
                     rounds: int = 3, alpha: float = 0.5, seq_len: int = 64,
                     batch: int = 4, lr: float = 0.01, epsilon: float = 0.04,
-                    seed: int = 0, log=print):
+                    seed: int = 0, shard_clients: bool = False, log=print):
     cfg = get_smoke_config(arch)
     model = build_model(cfg)
     opt = opt_lib.sgd()
     rng = np.random.default_rng(seed)
     key = jax.random.PRNGKey(seed)
+
+    client_sharding = None
+    if shard_clients:
+        from repro.distributed.sharding import client_shardings
+        from repro.launch.mesh import make_clients_mesh
+        mesh = make_clients_mesh(clients)
+        client_sharding = lambda tree: client_shardings(mesh, tree)  # noqa: E731
+        log(f"client mesh: {mesh} "
+            f"({clients // mesh.shape['clients']} clients/device)")
 
     # --- non-IID client corpora -------------------------------------
     corpus = lm_corpus(200_000, vocab=cfg.vocab_size, seed=seed)
@@ -83,7 +100,10 @@ def run_spmd_feddif(arch: str = "smollm_360m", clients: int = 4,
 
     def fleet_batch():
         per = [client_batch(c) for c in range(clients)]
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        if client_sharding is not None:
+            stacked = jax.device_put(stacked, client_sharding(stacked))
+        return stacked
 
     # --- jitted data plane ------------------------------------------
     fleet_step = jax.jit(make_fleet_train_step(model, opt, lr, remat=False))
@@ -99,6 +119,8 @@ def run_spmd_feddif(arch: str = "smollm_360m", clients: int = 4,
     auction = AuctionConfig(gamma_min=fl_cfg.gamma_min)
     planner = DiffusionPlanner(topology, channel, auction, epsilon=epsilon)
     state = _stack_states(model, opt, key, clients)
+    if client_sharding is not None:
+        state = jax.device_put(state, client_sharding(state))
     model_bits = agg.model_bits(state.params)
     auction.model_bits = model_bits
     ledger = ResourceLedger()
@@ -147,9 +169,14 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="shard the client axis over a ('clients',) mesh "
+                         "(use XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=K for a multi-device CPU mesh)")
     args = ap.parse_args()
     _, hist = run_spmd_feddif(args.arch, args.clients, args.rounds,
-                              args.alpha, args.seq_len, args.batch)
+                              args.alpha, args.seq_len, args.batch,
+                              shard_clients=args.shard_clients)
     print("loss history:", [round(h, 3) for h in hist])
 
 

@@ -12,8 +12,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS",
-           "HBM_BW", "ICI_BW", "mesh_axes"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_clients_mesh",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW", "mesh_axes"]
 
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -38,6 +38,25 @@ def make_host_mesh(data: int = 1, model: int = 1):
     model = max(1, min(model, n // max(data, 1)))
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=_auto(2))
+
+
+def make_clients_mesh(num_clients: int, max_devices: int | None = None):
+    """1-D ``("clients",)`` mesh for client-sharded FL data planes.
+
+    Uses the largest available device count that divides ``num_clients`` so
+    every shard carries an equal block of client slots (the sharded executor
+    requires an even split).  On a single-device host this degenerates to a
+    1-device mesh — same program, no collectives on the wire.  Drive CPU
+    multi-device runs with ``XLA_FLAGS=--xla_force_host_platform_device_count=K``
+    set before the first jax import.
+    """
+    n = len(jax.devices())
+    if max_devices is not None:
+        n = max(1, min(n, max_devices))
+    k = max(d for d in range(1, n + 1) if num_clients % d == 0)
+    # No axis_types: jax.sharding.AxisType is missing on older jax (0.4.x)
+    # and the default (Auto) is what we want everywhere.
+    return jax.make_mesh((k,), ("clients",))
 
 
 def mesh_axes(mesh) -> tuple[str, ...]:

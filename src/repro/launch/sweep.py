@@ -10,8 +10,11 @@ replication (seed axis vmapped on the data plane where the strategy allows,
 process loop otherwise; diffusion plans cached across seeds), and writes a
 ``BENCH_feddif_<sweep>.json`` artifact with per-cell accuracy curves, the
 Eq.-15 cumulative PUSCH bandwidth, sub-frame counts and wall-clock.
-``benchmarks/run.py`` drives the same registry — definitions live in one
-place.
+Artifacts land in the repo-wide BENCH directory
+(``$REPRO_BENCH_DIR`` or ``benchmarks/results/`` — see
+``repro.experiments.artifacts.default_out_dir``) unless ``--out-dir`` says
+otherwise.  ``benchmarks/run.py`` drives the same registry — definitions
+live in one place.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import argparse
 import sys
 
 from repro.experiments import REGISTRY, run_sweep, sweep_names
+from repro.experiments.artifacts import default_out_dir
 
 __all__ = ["main"]
 
@@ -38,15 +42,19 @@ def main(argv: list[str] | None = None) -> int:
                     help="number of replicate seeds (0..N-1)")
     ap.add_argument("--engine", choices=["auto", "seed_vmap", "loop"],
                     default="auto")
-    ap.add_argument("--executor", choices=["host", "fleet"], default="host",
-                    help="data plane per cell: host reference loop or "
-                         "client-stacked fleet (FLConfig.executor)")
+    ap.add_argument("--executor", choices=["host", "fleet", "sharded"],
+                    default="host",
+                    help="data plane per cell: host reference loop, "
+                         "client-stacked fleet, or client-sharded mesh "
+                         "(FLConfig.executor)")
     ap.add_argument("--planner", choices=["host", "jax"], default="host",
                     help="control plane per cell: host numpy oracle or "
                          "batched jax device planner that pre-plans the "
                          "whole sweep in one device call (FLConfig.planner)")
-    ap.add_argument("--out-dir", default=".",
-                    help="artifact directory (default: CWD)")
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: "
+                         "$REPRO_BENCH_DIR or benchmarks/results/ — the "
+                         "same place benchmarks/run.py writes)")
     ap.add_argument("--list", action="store_true",
                     help="list registered sweeps and exit")
     args = ap.parse_args(argv)
@@ -68,11 +76,12 @@ def main(argv: list[str] | None = None) -> int:
         return 2
     names = sweep_names() if args.sweep == "all" else [args.sweep]
     seeds = tuple(range(args.seeds))
+    out_dir = args.out_dir if args.out_dir is not None else default_out_dir()
     for name in names:
         print(f"# === sweep {name} ({'smoke' if smoke else 'full'}, "
               f"seeds={list(seeds)}) ===", flush=True)
         artifact = run_sweep(name, smoke=smoke, seeds=seeds,
-                             out_dir=args.out_dir, engine=args.engine,
+                             out_dir=out_dir, engine=args.engine,
                              executor=args.executor, planner=args.planner,
                              log=lambda s: print(s, flush=True))
         pc = artifact["plan_cache"]

@@ -41,8 +41,11 @@ def test_every_sweep_expands_to_valid_specs(name, smoke):
         # The axis value must actually land on the spec.
         got = {"alpha": c.spec.alpha, "epsilon": c.spec.fl.epsilon,
                "gamma_min": c.spec.fl.gamma_min, "task": c.spec.task,
-               "strategy": c.spec.fl.strategy}[c.axis]
+               "strategy": c.spec.fl.strategy,
+               "num_clients": c.spec.fl.num_clients}[c.axis]
         assert got == c.value
+        if c.axis == "num_clients":   # scaling sweeps keep M = N
+            assert c.spec.fl.num_models == c.value
 
 
 def test_smoke_grid_is_subset_of_full_grid():
@@ -56,6 +59,27 @@ def test_table2_strategy_axis_has_at_least_three_points():
     assert len(d.values) >= 3
     assert "d2d_random_walk" in d.values
     assert "feddif" in d.values and "fedavg" in d.values
+
+
+def test_fig7_scaling_targets_large_n_with_churn():
+    d = REGISTRY["fig7_scaling"]
+    assert d.axis == "num_clients"
+    assert max(d.values) >= 256 and max(d.smoke_values) >= 64
+    assert d.fl_overrides.get("churn_rate", 0) > 0
+    cells = expand_sweep("fig7_scaling", smoke=True, executor="sharded")
+    assert all(c.spec.fl.executor == "sharded" for c in cells)
+    assert all(c.spec.fl.churn_rate > 0 for c in cells)
+
+
+def test_churned_cells_replicate_on_loop_engine():
+    """Churn masks are applied schedule-side in run_federated; the seed_vmap
+    engine would skip them, so engine picking must route to the loop."""
+    from repro.experiments.orchestrator import _pick_engine
+    cell = next(c for c in expand_sweep("fig7_scaling", smoke=True)
+                if c.strategy == "fedavg")
+    assert _pick_engine(cell, "auto") == "loop"
+    with pytest.raises(ValueError, match="churn"):
+        run_replicates_vmapped(cell.spec, (0,))
 
 
 def test_expand_overrides_reach_spec():

@@ -133,9 +133,24 @@ def test_ssm_scan_decay_property():
                                rtol=1e-5)
 
 
-def test_ops_dispatch_xla_fallback():
-    """On this CPU container, implementation='auto' must use the oracle."""
+def test_ops_dispatch_xla_fallback(monkeypatch):
+    """On this CPU container, implementation='auto' must use the oracle
+    (absent the REPRO_KERNELS_IMPL override CI's pallas-interpret job sets).
+    """
+    monkeypatch.delenv("REPRO_KERNELS_IMPL", raising=False)
     q = jax.random.normal(KEY, (1, 16, 1, 32), jnp.float32)
     out = ops.flash_attention(q, q, q, implementation="auto")
     want = ref.flash_attention_ref(q, q, q)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_ops_auto_respects_impl_env(monkeypatch):
+    """REPRO_KERNELS_IMPL forces what 'auto' resolves to (CI pallas job)."""
+    monkeypatch.setenv("REPRO_KERNELS_IMPL", "pallas_interpret")
+    q = jax.random.normal(KEY, (1, 32, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, q, q, implementation="auto")
+    want = ref.flash_attention_ref(q, q, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-6)
+    monkeypatch.setenv("REPRO_KERNELS_IMPL", "warp")
+    with pytest.raises(ValueError, match="REPRO_KERNELS_IMPL"):
+        ops.flash_attention(q, q, q, implementation="auto")
