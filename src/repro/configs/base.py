@@ -24,6 +24,12 @@ class MoEConfig:
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.01   # load-balance loss (Switch-style)
     num_shared_experts: int = 0
+    # Every MoE in the zoo (Mixtral, Qwen3-MoE, Kimi/Moonshot) routes
+    # droplessly in its reference implementation; capacity_factor then only
+    # sizes the dispatch buffers for the roofline, it never drops tokens.
+    # Capacity-bounded (Switch/GShard) dispatch remains available for
+    # experiments by setting dropless=False.
+    dropless: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -44,6 +44,7 @@ from repro.channels.resources import (outage_probability_jax,
 from repro.core import dol as dol_lib
 from repro.core.dol import PlannerState
 from repro.core.matching import auction_assign
+from repro.kernels import ops as kernel_ops
 
 __all__ = ["PlanInputs", "PlanOutputs", "draw_gamma_sequence",
            "device_gamma_sequence", "plan_round_inputs", "plan_rounds",
@@ -128,9 +129,13 @@ def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
             active &= ~jnp.all(st.visited, axis=1)
         any_active = jnp.any(active)
 
-        # Bids (Eq. 32) and feasibility (18b/c/e + Eq. 39 outage).
-        cand = dol_lib.iid_distance_candidates(
-            st.dol, st.chain_size, inp.dsi, inp.data_sizes, metric)
+        # Bids (Eq. 32) and feasibility (18b/c/e + Eq. 39 outage).  The
+        # (M, N) candidate scores run through the kernel data plane: the
+        # tiled Pallas contraction on TPU / under REPRO_KERNELS_IMPL, the
+        # broadcast composite (bit-identical to the host oracle) on the
+        # reference path.
+        cand = kernel_ops.dol_bid_scores(
+            st.dol, st.chain_size, inp.dsi, inp.data_sizes, metric=metric)
         bids = iid[:, None] - cand                           # (M, N)
         gamma_edge = gamma[st.holder]                        # (M, N)
         feas = bids > 0.0

@@ -49,8 +49,13 @@ from repro.train.trainstep import TrainState, make_train_step
 
 Params = Any
 
+# Re-exported for data-plane callers: the flatten/unflatten pair lives with
+# the kernels (kernels/diffusion.py) so kernels.ops can use it cycle-free.
+from repro.kernels.diffusion import stack_ravel, stack_unravel  # noqa: E402
+
 __all__ = ["make_fleet_train_step", "make_diffusion_step", "fleet_aggregate",
-           "diffuse_params", "masked_stc_compress"]
+           "diffuse_params", "masked_stc_compress", "stack_ravel",
+           "stack_unravel"]
 
 
 def diffuse_params(params: Params, perm: jax.Array) -> Params:
@@ -76,7 +81,8 @@ def fleet_aggregate(params: Params, weights: jax.Array) -> Params:
 
 
 def masked_stc_compress(params: Params, ref: Params, mask: jax.Array,
-                        sparsity: float = 0.01) -> Params:
+                        sparsity: float = 0.01,
+                        implementation: str = "auto") -> Params:
     """STC-compress selected slots of a client-stacked pytree against ``ref``.
 
     Slot ``c`` with ``mask[c]`` becomes ``ref + STC(params[c] − ref)`` — the
@@ -84,13 +90,19 @@ def masked_stc_compress(params: Params, ref: Params, mask: jax.Array,
     global plus the ternarized delta); other slots pass through untouched.
     ``ref`` is unstacked (the broadcast global every PUE already holds).
     Used by the fleet executor for ``stc`` / ``feddif_stc`` hops and uplinks.
+
+    The per-leaf ternarize runs through :func:`repro.kernels.ops.stc_topk`
+    (per-row top-k thresholds, as the host path's per-leaf ``top_k``): the
+    Pallas kernel on TPU / under ``REPRO_KERNELS_IMPL``, the exact host
+    composite otherwise.
     """
-    from repro.fl.compression import stc_compress_leaf
+    from repro.kernels import ops
 
     def leaf(x, r):
-        comp = jax.vmap(lambda xi: r + stc_compress_leaf(xi - r, sparsity))(x)
-        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
-        return jnp.where(m, comp, x)
+        c = x.shape[0]
+        out = ops.stc_topk(x.reshape(c, -1), r.reshape(-1), mask, sparsity,
+                           implementation=implementation)
+        return out.reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(leaf, params, ref)
 

@@ -55,6 +55,7 @@ from repro.distributed.fedshard import diffuse_params, masked_stc_compress
 from repro.distributed.sharding import CLIENT_AXIS
 from repro.fl.compression import stc_compress
 from repro.fl.schedulers import PROX_STRATEGIES
+from repro.kernels import ops as kernel_ops
 from repro.train import optimizer as opt_lib
 
 Params = Any
@@ -208,20 +209,20 @@ class FleetExecutor:
         return diffuse_params(params, jnp.asarray(op.src_of_dst))
 
     def _mix(self, params: Params, op: MixOp, num_slots: int) -> Params:
-        w = jnp.asarray(op.matrix(num_slots))
-        return jax.tree.map(
-            lambda x: jnp.einsum("ij,j...->i...", w,
-                                 x.astype(jnp.float32)).astype(x.dtype),
-            params)
+        # Eq. (10) through the kernel data plane: the fused single-HBM-pass
+        # Pallas kernel on TPU / under REPRO_KERNELS_IMPL, the per-leaf
+        # einsum chain on the XLA reference path.
+        w = jnp.asarray(op.matrix(num_slots), jnp.float32)
+        return kernel_ops.mix_aggregate_tree(params, w)
 
     def _masked_stc(self, params: Params, ref: Params, mask: np.ndarray,
                     sparsity: float) -> Params:
         return masked_stc_compress(params, ref, jnp.asarray(mask), sparsity)
 
     def _aggregate(self, payload: Params, w: jax.Array) -> Params:
-        return jax.tree.map(
-            lambda x: jnp.tensordot(w, x.astype(jnp.float32),
-                                    axes=(0, 0)).astype(x.dtype), payload)
+        # Eq. (11): aggregation is the same kernel with one output row.
+        return kernel_ops.mix_aggregate_tree(
+            payload, w.astype(jnp.float32).reshape(1, -1), collapse=True)
 
     # ------------------------------------------------------------------ round
 
@@ -374,26 +375,31 @@ class ShardedFleetExecutor(FleetExecutor):
                                        in_specs=(pc, pc, pc), out_specs=pc)
 
         def mix_tree(params, wt_local):
-            # wt_local: this shard's (nl, C) block of Wᵀ — partial products
-            # over local source slots, reduced+scattered back to slot owners.
-            def leaf(x):
-                part = jnp.einsum("jc,j...->c...", wt_local,
-                                  x.astype(jnp.float32))
-                out = jax.lax.psum_scatter(part, CLIENT_AXIS,
+            # wt_local: this shard's (nl, C) block of Wᵀ — the kernel data
+            # plane computes the partial products over local source slots
+            # ((C, ...) fp32 per leaf: partials stay fp32 across the
+            # collective), then psum_scatter reduces them back to owners.
+            part = kernel_ops.mix_aggregate_tree(params, wt_local.T,
+                                                 keep_float32=True)
+
+            def scatter(x, orig):
+                out = jax.lax.psum_scatter(x, CLIENT_AXIS,
                                            scatter_dimension=0, tiled=True)
-                return out.astype(x.dtype)
-            return jax.tree.map(leaf, params)
+                return out.astype(orig.dtype)
+            return jax.tree.map(scatter, part, params)
 
         self._sh_mix = self._shmap(mix_tree, in_specs=(pc, pc), out_specs=pc)
 
         def agg_tree(payload, w_local):
             # Eq. (11) as a masked psum: dropped/churned slots carry zero
             # weight, so their shard contributes nothing to the reduction.
-            def leaf(x):
-                part = jnp.tensordot(w_local, x.astype(jnp.float32),
-                                     axes=(0, 0))
-                return jax.lax.psum(part, CLIENT_AXIS).astype(x.dtype)
-            return jax.tree.map(leaf, payload)
+            part = kernel_ops.mix_aggregate_tree(
+                payload, w_local.reshape(1, -1), collapse=True,
+                keep_float32=True)
+
+            def reduce(x, orig):
+                return jax.lax.psum(x, CLIENT_AXIS).astype(orig.dtype)
+            return jax.tree.map(reduce, part, payload)
 
         self._sh_agg = self._shmap(agg_tree, in_specs=(pc, pc), out_specs=P())
 

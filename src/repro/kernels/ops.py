@@ -2,12 +2,20 @@
 pure-jnp oracle (ref.py) elsewhere — the dry-run path lowers the oracle
 because Pallas-TPU cannot compile on a CPU backend (DESIGN.md §2).
 
-``implementation`` ∈ {"auto", "pallas", "pallas_interpret", "xla"}.
+``implementation`` ∈ {"auto", "pallas", "pallas_interpret", "xla"}
+("ref" is accepted as an alias for "xla" — the pure-jnp reference twins in
+``ref.py`` ARE the XLA path).
 
 The ``REPRO_KERNELS_IMPL`` environment variable overrides what ``"auto"``
 resolves to (explicit ``implementation=`` arguments always win).  CI's
 ``pallas-interpret`` job sets it to ``pallas_interpret`` so the Pallas
 kernel bodies — not just the XLA fallbacks — are exercised on CPU runners.
+
+LM-side kernels (flash_attention / stc_compress / ssm_scan / ssd_scan) are
+joined by the FL diffusion data plane (mix_aggregate / stc_topk /
+dol_bid_scores — ``kernels/diffusion.py``), which the executors, fedshard
+and the planner call through the same dispatch so one env var flips the
+whole system between Pallas and reference bodies.
 """
 from __future__ import annotations
 
@@ -17,23 +25,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.diffusion import (dol_bid_scores_pallas,
+                                     mix_aggregate_pallas, stack_ravel,
+                                     stack_unravel, stc_rows_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.stc_compress import stc_apply_pallas, stc_reduce_pallas
 
-__all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan"]
+__all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan",
+           "mix_aggregate", "mix_aggregate_tree", "stc_topk",
+           "dol_bid_scores"]
+
+_IMPLS = ("pallas", "pallas_interpret", "xla", "ref")
 
 
 def _resolve(implementation: str) -> str:
     if implementation != "auto":
-        return implementation
+        return "xla" if implementation == "ref" else implementation
     forced = os.environ.get("REPRO_KERNELS_IMPL", "")
     if forced:
-        if forced not in ("pallas", "pallas_interpret", "xla"):
+        if forced not in _IMPLS:
             raise ValueError(
-                f"REPRO_KERNELS_IMPL={forced!r}: expected pallas, "
-                f"pallas_interpret or xla")
-        return forced
+                f"REPRO_KERNELS_IMPL={forced!r}: expected one of {_IMPLS}")
+        return "xla" if forced == "ref" else forced
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
@@ -64,6 +78,83 @@ def stc_compress(x, sparsity: float = 0.01, *,
     mu = ssum / jnp.maximum(cnt, 1.0)
     out = stc_apply_pallas(flat, thr, mu, interpret=interpret)
     return out.reshape(x.shape).astype(x.dtype)
+
+
+def mix_aggregate(x, w, *, implementation: str = "auto") -> jax.Array:
+    """Eq. (10)/(11) fused mix/aggregate: x (C, F) client-stacked flat
+    params, w (G, C) weights (a MixOp matrix, an aggregation row, or a
+    sharded Wᵀ block) → (G, F) fp32 in one pass."""
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.mix_aggregate_ref(x, w)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return mix_aggregate_pallas(x, w, interpret=interpret)
+
+
+def mix_aggregate_tree(params, w, *, collapse: bool = False,
+                       keep_float32: bool = False,
+                       implementation: str = "auto"):
+    """Tree-level Eq. (10)/(11): mix/aggregate a client-stacked pytree.
+
+    ``w`` is (G, C): a (C, C) MixOp matrix, a (1, C) Eq.-11 aggregation
+    row, or a Wᵀ shard block.  ``collapse=True`` (aggregation) drops the
+    leading slot axis — explicit rather than inferred from G=1, so a
+    one-slot MixOp stays stacked.  ``keep_float32=True`` returns fp32
+    leaves (for sharded partials that still cross a psum); otherwise leaf
+    dtypes are preserved.
+
+    Dispatch picks the *placement*, not just the body: the XLA path runs
+    the per-leaf einsum chain (XLA-CPU fuses it well, and concatenating
+    leaves costs a real copy there), while the Pallas path flattens the
+    fleet once and streams it through :func:`mix_aggregate` in a single
+    HBM pass — the per-leaf chain re-reads HBM per leaf on TPU.
+    """
+    impl = _resolve(implementation)
+    w = jnp.asarray(w, jnp.float32)
+    if collapse:
+        assert w.shape[0] == 1, w.shape
+    if impl == "xla":
+        def leaf(x):
+            out = jnp.einsum("gc,c...->g...", w, x.astype(jnp.float32))
+            if not keep_float32:
+                out = out.astype(x.dtype)
+            return out[0] if collapse else out
+        return jax.tree.map(leaf, params)
+    flat, spec = stack_ravel(params)
+    out = mix_aggregate(flat, w, implementation=impl)
+    return stack_unravel(out, spec, collapse=collapse,
+                         keep_float32=keep_float32)
+
+
+def stc_topk(x, ref_row, mask, sparsity: float = 0.01, *,
+             implementation: str = "auto") -> jax.Array:
+    """Masked per-row (per-client) STC against a shared reference row —
+    the D2D hop compression of ``fedshard.masked_stc_compress`` on one
+    flattened leaf.  x (C, n); ref_row (n,); mask (C,) bool."""
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.stc_rows_ref(x, ref_row, mask, sparsity)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return stc_rows_pallas(x, ref_row, mask, sparsity, interpret=interpret)
+
+
+def dol_bid_scores(dol, chain_size, dsi, data_size, *,
+                   metric: str = "w1_norm",
+                   implementation: str = "auto") -> jax.Array:
+    """The planner's (M, N) candidate IID-distance matrix (Eq. 32 bids).
+
+    The Pallas path implements the paper's default ``w1_norm`` metric
+    (Eq. B.1) as a tiled MXU contraction; the Appendix-C divergence
+    metrics (kld/jsd/w1_true) have no closed matmul form and always use
+    the reference composite.
+    """
+    impl = _resolve(implementation)
+    if impl == "xla" or metric != "w1_norm":
+        return ref.dol_bid_scores_ref(dol, chain_size, dsi, data_size,
+                                      metric)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return dol_bid_scores_pallas(dol, chain_size, dsi, data_size,
+                                 interpret=interpret)
 
 
 def ssm_scan(da, dbx, *, implementation: str = "auto") -> jax.Array:

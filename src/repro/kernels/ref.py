@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["flash_attention_ref", "stc_compress_ref", "ssm_scan_ref"]
+__all__ = ["flash_attention_ref", "stc_compress_ref", "ssm_scan_ref",
+           "mix_aggregate_ref", "stc_rows_ref", "dol_bid_scores_ref"]
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -48,6 +49,36 @@ def stc_compress_ref(x: jax.Array, sparsity: float) -> jax.Array:
     mu = jnp.mean(topv)
     out = jnp.zeros_like(flat).at[topi].set(jnp.sign(flat[topi]) * mu)
     return out.reshape(x.shape).astype(x.dtype)
+
+
+def mix_aggregate_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Eq. (10)/(11) weighted reduction on a flattened client-stacked block:
+    ``out[g, f] = Σ_c w[g, c]·x[c, f]``.  x (C, F); w (G, C) → (G, F) fp32."""
+    return jnp.einsum("gc,cf->gf", w.astype(jnp.float32),
+                      x.astype(jnp.float32))
+
+
+def stc_rows_ref(x: jax.Array, ref_row: jax.Array, mask: jax.Array,
+                 sparsity: float) -> jax.Array:
+    """Masked per-row STC against a shared reference row — the exact host
+    composite of ``fedshard.masked_stc_compress`` on one flattened leaf:
+    row c becomes ``ref + STC(x_c − ref)`` where masked, else passes
+    through."""
+    ref_row = ref_row.astype(jnp.float32)
+    comp = jax.vmap(
+        lambda row: ref_row + stc_compress_ref(
+            row.astype(jnp.float32) - ref_row, sparsity))(x)
+    return jnp.where(mask.reshape(-1, 1), comp.astype(x.dtype), x)
+
+
+def dol_bid_scores_ref(dol: jax.Array, chain_size: jax.Array,
+                       dsi: jax.Array, data_size: jax.Array,
+                       metric: str = "w1_norm") -> jax.Array:
+    """Candidate IID-distance matrix via the (M, N, C) broadcast composite
+    — ``repro.core.dol.iid_distance_candidates``, the semantics of record
+    for the planner's Eq.-32 bid tensor."""
+    from repro.core.dol import iid_distance_candidates
+    return iid_distance_candidates(dol, chain_size, dsi, data_size, metric)
 
 
 def ssm_scan_ref(da: jax.Array, dbx: jax.Array,

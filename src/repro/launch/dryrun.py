@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ARCH_IDS, SHAPES, ModelConfig, ShapeConfig, get_config
 from repro.distributed import sharding as sh
 from repro.distributed.fedshard import make_diffusion_step
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import activate_mesh, make_production_mesh
 from repro.models.zoo import build_model
 from repro.train import optimizer as opt_lib
 from repro.train.trainstep import (TrainState, make_serve_step,
@@ -109,7 +109,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     batch = input_specs(cfg, shape)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         if shape.mode == "train":
             key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
             state_shapes = jax.eval_shape(
@@ -175,7 +175,8 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.launch.hlo_analysis import xla_cost_analysis
+    cost = xla_cost_analysis(compiled)
     txt = compiled.as_text()
     dump = os.environ.get("DRYRUN_DUMP_HLO")
     if dump:
@@ -231,7 +232,7 @@ def feddif_lower(arch: str, fsdp: bool | None = None) -> dict:
     npod = mesh.shape["pod"]
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
         base_state = jax.eval_shape(
             lambda k: TrainState(params=model.init(k),
@@ -270,10 +271,10 @@ def feddif_lower(arch: str, fsdp: bool | None = None) -> dict:
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis()
+    from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
+    cost = xla_cost_analysis(compiled)
     txt = compiled.as_text()
     coll = collective_bytes(txt)
-    from repro.launch.hlo_analysis import analyze_hlo
     hlo = analyze_hlo(txt)
     return {"status": "ok", "arch": arch, "shape": "train_4k",
             "mesh": "2x16x16-feddif", "chips": 512,

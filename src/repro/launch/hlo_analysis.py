@@ -28,7 +28,19 @@ import math
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "xla_cost_analysis", "HloCost"]
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jaxlib.
+
+    Pre-0.5 jaxlib returns a one-element list of per-device dicts; newer
+    versions return the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -113,6 +125,29 @@ def _trip_count(cond: _Comp) -> int:
     return best
 
 
+def _call_operands(line: str, opname: str) -> list[str]:
+    """Operand names inside ``opname(...)`` — tolerant of both the bare
+    (``dot(%a, %b)``) and the typed (``dot(f32[4]{0} %a, ...)``) operand
+    syntax jaxlib switched to."""
+    m = re.search(rf"\b{opname}\(([^)]*)\)", line)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _operand_dims(comp: _Comp, line: str, name: str) -> list[int] | None:
+    """Dims of an operand: from the computation's def table, or — for
+    operands jaxlib now annotates inline — parsed off the call site."""
+    info = comp.shapes.get(name)
+    if info and info[1]:
+        return info[1][0][1]
+    m = re.search(rf"([a-z0-9]+)\[([0-9,]*)\](?:\{{[^}}]*\}})?\s+"
+                  rf"%{re.escape(name)}\b", line)
+    if m and m.group(1) in DTYPE_BYTES:
+        return [int(x) for x in m.group(2).split(",") if x]
+    return None
+
+
 def _dot_flops(line: str, comp: _Comp) -> float:
     dm = _DEF.match(line)
     if not dm:
@@ -120,15 +155,13 @@ def _dot_flops(line: str, comp: _Comp) -> float:
     out_bytes, out_dims = _shape_info(dm.group(2).split(" dot(")[0])
     out_n = math.prod(out_dims[0][1]) if out_dims and out_dims[0][1] else 1
     # contracting dims of the lhs operand
-    ops = re.search(r"dot\((%[\w.\-]+)(?:, )?(%[\w.\-]+)?", line)
+    ops = _call_operands(line, "dot")
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     if not ops or not cm:
         return 2.0 * out_n  # degenerate
-    lhs = ops.group(1).lstrip("%")
-    lhs_info = comp.shapes.get(lhs)
-    if not lhs_info or not lhs_info[1]:
+    lhs_dims = _operand_dims(comp, line, ops[0])
+    if not lhs_dims:
         return 2.0 * out_n
-    lhs_dims = lhs_info[1][0][1]
     contract = 1
     for idx in (int(x) for x in cm.group(1).split(",") if x):
         if idx < len(lhs_dims):
@@ -142,11 +175,11 @@ def _conv_flops(line: str, comp: _Comp) -> float:
         return 0.0
     _, out_dims = _shape_info(dm.group(2).split(" convolution")[0])
     out_n = math.prod(out_dims[0][1]) if out_dims and out_dims[0][1] else 1
-    ops = re.search(r"convolution\((%[\w.\-]+), (%[\w.\-]+)\)", line)
-    if not ops:
+    ops = _call_operands(line, "convolution")
+    if len(ops) < 2:
         return 2.0 * out_n
-    rhs = comp.shapes.get(ops.group(2).lstrip("%"))
-    rhs_n = math.prod(rhs[1][0][1]) if rhs and rhs[1] and rhs[1][0][1] else 1
+    rhs_dims = _operand_dims(comp, line, ops[1])
+    rhs_n = math.prod(rhs_dims) if rhs_dims else 1
     feat = re.search(r"feature_group_count=(\d+)", line)
     groups = int(feat.group(1)) if feat else 1
     # flops ≈ 2 · out · (kernel elems / out_features) — per-group kernel
@@ -216,8 +249,15 @@ def analyze_hlo(txt: str) -> HloCost:
             if " while(" in line:
                 bm = re.search(r"body=%?([\w.\-]+)", line)
                 cm = re.search(r"condition=%?([\w.\-]+)", line)
-                trip = _trip_count(comps[cm.group(1)]) if cm and \
-                    cm.group(1) in comps else 1
+                # Newer jaxlib stamps the recovered bound right on the while
+                # op; the condition-constant scan is the fallback for HLO
+                # that predates known_trip_count.
+                km = re.search(r'known_trip_count[":{\s]+n[":\s]+(\d+)', line)
+                if km:
+                    trip = int(km.group(1))
+                else:
+                    trip = _trip_count(comps[cm.group(1)]) if cm and \
+                        cm.group(1) in comps else 1
                 if bm and bm.group(1) in comps:
                     mult[bm.group(1)] += m_cur * trip
                     if bm.group(1) not in seen:

@@ -38,10 +38,29 @@ class MoESpec:
     router_aux_coef: float = 0.01
     num_shared_experts: int = 0
     compute_dtype: Any = jnp.bfloat16
+    # Dropless dispatch: buffers sized to the worst case (every token on one
+    # expert) so no token is ever dropped.  This is what Mixtral / Qwen3-MoE
+    # reference implementations do, and it is REQUIRED for prefill ≡ decode:
+    # capacity drops depend on which other tokens share the batch, so a
+    # token kept at decode (T=1 step, no competition) can be dropped at
+    # prefill — tests/test_models_consistency.py pins the parity.
+    dropless: bool = False
 
     def capacity(self, num_tokens: int) -> int:
-        c = int(num_tokens * self.top_k * self.capacity_factor
-                / self.num_experts)
+        if self.dropless:
+            # Each token routes to ≤1 slot per expert (top-k indices are
+            # distinct), so cap = T can never overflow.  Static worst-case
+            # buffers are the price of dropless under fixed shapes: E·T
+            # dispatch rows vs T·k·cf capacity-bounded — E/(k·cf)× more
+            # expert-FFN work (12.8× for qwen3_moe's E=128/k=8), mostly
+            # multiplying zeros.  Use dropless=False (Switch/GShard
+            # semantics) for roofline/FLOP studies; a ragged grouped-GEMM
+            # dispatch would make dropless cost exactly T·k and is the
+            # known follow-up.
+            c = num_tokens
+        else:
+            c = int(num_tokens * self.top_k * self.capacity_factor
+                    / self.num_experts)
         return max(8, -(-c // 8) * 8)    # round up to 8 for TPU lanes
 
 

@@ -86,7 +86,8 @@ def specs_for(cfg: ModelConfig):
             top_k=cfg.moe.top_k, d_ff_expert=cfg.moe.d_ff_expert,
             capacity_factor=cfg.moe.capacity_factor,
             router_aux_coef=cfg.moe.router_aux_coef,
-            num_shared_experts=cfg.moe.num_shared_experts, compute_dtype=cd)
+            num_shared_experts=cfg.moe.num_shared_experts,
+            dropless=cfg.moe.dropless, compute_dtype=cd)
     m1 = m2 = None
     if cfg.ssm is not None:
         # §Perf P2b: larger scan chunks cut per-iteration boundary traffic

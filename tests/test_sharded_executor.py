@@ -34,10 +34,18 @@ def _spec(strategy, executor, clients=64, rounds=2, **kw):
 
 # ------------------------------------------------- three-way parity at N=64
 
-@pytest.mark.parametrize("strategy", ["feddif", "fedavg"])
+@pytest.mark.parametrize("strategy", ["feddif", "fedavg", "feddif_stc",
+                                      "gossip"])
 def test_host_fleet_sharded_parity_n64(strategy):
     """Host, fleet and sharded planes at N=64: identical ledgers (bitwise —
-    charging is schedule-side), matching final accuracy and params."""
+    charging is schedule-side), matching final accuracy and params.
+
+    feddif_stc and gossip extend the pair through the kernel data plane
+    (``kernels/diffusion.py``): STC-compressed hops exercise ``stc_topk``
+    and the gossip MixOp exercises ``mix_aggregate`` on all three planes
+    (with ``implementation="auto"`` — the reference twins here, the Pallas
+    bodies on TPU / under ``REPRO_KERNELS_IMPL``).
+    """
     results = {ex: run_experiment(_spec(strategy, ex))
                for ex in ("host", "fleet", "sharded")}
     host = results["host"]
