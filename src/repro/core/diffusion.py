@@ -177,6 +177,97 @@ class PlanCache:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._store)}
 
+    # ------------------------------------------------------- serialization
+    #
+    # Durable sweeps persist the cache across preemptions so a resumed run
+    # *replays* plans instead of replanning them.  The state dict is pure
+    # JSON-able data (no pickle): keys are nested tuples of scalars (lists
+    # on disk, retupled on load), plans/hops/states are plain number lists.
+
+    def state_dict(self) -> dict:
+        entries = []
+        for key, (plan, state) in self._store.items():
+            entries.append({
+                "key": _key_jsonable(key),
+                "plan": {
+                    "hops": [[h.model, h.src, h.dst, h.gamma, h.bandwidth,
+                              h.decrement, h.round_index]
+                             for h in plan.hops],
+                    "num_rounds": int(plan.num_rounds),
+                    "final_iid_distance":
+                        np.asarray(plan.final_iid_distance,
+                                   np.float32).tolist(),
+                    "efficiency_per_round":
+                        [float(e) for e in plan.efficiency_per_round],
+                    "num_models": plan.num_models,
+                },
+                "state": {
+                    "dol": np.asarray(state.dol, np.float32).tolist(),
+                    "chain_size":
+                        np.asarray(state.chain_size, np.float32).tolist(),
+                    "visited": np.asarray(state.visited, bool).tolist(),
+                    "holder": np.asarray(state.holder, np.int64).tolist(),
+                    "round_index": int(state.round_index),
+                },
+            })
+        return {"version": 1, "max_entries": self.max_entries,
+                "hits": self.hits, "misses": self.misses,
+                "entries": entries}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Merge serialized entries into this cache (counters adopted too,
+        so a resumed sweep's cache statistics continue, not restart)."""
+        self.max_entries = int(state.get("max_entries", self.max_entries))
+        self.hits = int(state.get("hits", 0))
+        self.misses = int(state.get("misses", 0))
+        for e in state["entries"]:
+            key = _key_from_jsonable(e["key"])
+            p, s = e["plan"], e["state"]
+            plan = DiffusionPlan(
+                hops=[DiffusionHop(model=int(h[0]), src=int(h[1]),
+                                   dst=int(h[2]), gamma=float(h[3]),
+                                   bandwidth=float(h[4]),
+                                   decrement=float(h[5]),
+                                   round_index=int(h[6]))
+                      for h in p["hops"]],
+                num_rounds=int(p["num_rounds"]),
+                final_iid_distance=np.asarray(p["final_iid_distance"],
+                                              np.float32),
+                efficiency_per_round=[float(x)
+                                      for x in p["efficiency_per_round"]],
+                num_models=(None if p["num_models"] is None
+                            else int(p["num_models"])))
+            post = dol_lib.DiffusionState(
+                dol=np.asarray(s["dol"], np.float32),
+                chain_size=np.asarray(s["chain_size"], np.float32),
+                visited=np.asarray(s["visited"], bool),
+                holder=np.asarray(s["holder"], np.int64),
+                round_index=int(s["round_index"]))
+            self._store[key] = (plan, post)
+            self._store.move_to_end(key)
+        while len(self._store) > self.max_entries:
+            self._store.popitem(last=False)
+
+    @classmethod
+    def from_state_dict(cls, state: dict) -> "PlanCache":
+        cache = cls(max_entries=int(state.get("max_entries", 256)))
+        cache.load_state_dict(state)
+        return cache
+
+
+def _key_jsonable(key):
+    """Cache keys are nested tuples of (int, float, bool, str, None) — JSON
+    keeps every scalar type distinct, only the tuple/list shape changes."""
+    if isinstance(key, tuple):
+        return [_key_jsonable(k) for k in key]
+    return key
+
+
+def _key_from_jsonable(key):
+    if isinstance(key, list):
+        return tuple(_key_from_jsonable(k) for k in key)
+    return key
+
 
 class DiffusionPlanner:
     """Plans all diffusion rounds of one communication round."""

@@ -23,6 +23,19 @@ class ClientLoader:
     seed: int
     _epoch: int = 0
 
+    @property
+    def epochs_drawn(self) -> int:
+        """Position of this client's shuffle-RNG stream: how many epochs
+        have been drawn.  Epoch ``k`` shuffles with ``default_rng(seed + k)``
+        — the stream is a counter, so a resumed run that :meth:`seek`-s back
+        to a checkpointed position replays the exact same batch order."""
+        return self._epoch
+
+    def seek(self, epochs_drawn: int) -> None:
+        """Reposition the shuffle stream (sweep resume restores cursors
+        captured by :attr:`epochs_drawn` at the checkpointed round)."""
+        self._epoch = int(epochs_drawn)
+
     def num_batches(self) -> int:
         if not len(self.y):      # empty shard: epoch() yields nothing
             return 0

@@ -12,12 +12,18 @@ Public API:
 * :mod:`repro.experiments.replicate` — the replication engines
   (seed-vmapped data plane vs process-level loop).
 * :mod:`repro.experiments.artifacts` — artifact schema and writer.
+* :mod:`repro.experiments.durability` — durable sweeps: the work-queue
+  manifest, per-cell records and plan-cache snapshot behind
+  ``run_sweep(..., checkpoint_every=R)`` / ``resume=True``.
 
 CLI: ``PYTHONPATH=src python -m repro.launch.sweep --sweep fig3_alpha --smoke``.
 """
 from repro.experiments.artifacts import (bench_file, bench_path,
                                          build_artifact, default_out_dir,
-                                         write_artifact, write_bench_json)
+                                         strip_volatile, write_artifact,
+                                         write_bench_json)
+from repro.experiments.durability import (SweepManifest, cell_slug,
+                                          default_state_dir)
 from repro.experiments.orchestrator import run_cell, run_sweep
 from repro.experiments.registry import (REGISTRY, SweepCell, SweepDef,
                                         expand_sweep, get_sweep, register,
@@ -32,5 +38,6 @@ __all__ = [
     "run_cell", "run_sweep",
     "SEED_VMAP_STRATEGIES", "run_replicates_loop", "run_replicates_vmapped",
     "bench_file", "bench_path", "build_artifact", "default_out_dir",
-    "write_artifact", "write_bench_json",
+    "strip_volatile", "write_artifact", "write_bench_json",
+    "SweepManifest", "cell_slug", "default_state_dir",
 ]

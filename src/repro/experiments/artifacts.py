@@ -16,16 +16,17 @@ upload globs and the budget gate read from exactly one place.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Any
 
 import numpy as np
 
+from repro.train.checkpoint import atomic_write_json
+
 __all__ = ["SCHEMA_VERSION", "DEFAULT_OUT_DIR", "default_out_dir",
            "bench_file", "bench_path", "build_artifact", "write_artifact",
-           "write_bench_json", "summarize_curves"]
+           "write_bench_json", "summarize_curves", "strip_volatile"]
 
 SCHEMA_VERSION = 1
 
@@ -57,8 +58,9 @@ def write_bench_json(name: str, record: dict,
     """
     path = bench_file(name, out_dir)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, default=_json_default)
+    # Atomic (temp + rename): a reader — or a resumed sweep diffing against
+    # a clean run — never observes a torn BENCH file from a killed writer.
+    atomic_write_json(path, record, indent=2, default=_json_default)
     return path
 
 
@@ -79,7 +81,8 @@ def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
                    seeds: list[int], cells: list[dict],
                    executor: str = "host", planner: str = "host",
                    plan_cache_stats: dict | None = None,
-                   wall_clock_s: float | None = None) -> dict:
+                   wall_clock_s: float | None = None,
+                   failed_cells: list[dict] | None = None) -> dict:
     """Assemble one ``BENCH_feddif_<sweep>.json`` payload.
 
     ``plan_cache_stats`` carries the sweep-level
@@ -87,6 +90,11 @@ def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
     each cell record additionally carries its own per-cell hit/miss delta
     under ``cells[i]["plan_cache"]`` so cache efficacy is visible in the
     perf trajectory, not just as one sweep-wide total.
+
+    ``failed_cells`` (durable sweeps) records cells whose run raised and was
+    isolated by the work queue: ``[{"label": ..., "error": ...}, ...]``.
+    Always present in the payload so downstream tooling can gate on
+    "no failed cells" without probing for the key.
     """
     return {
         "schema_version": SCHEMA_VERSION,
@@ -100,19 +108,38 @@ def build_artifact(sweep_name: str, figure: str, axis: str, smoke: bool,
         "created_unix": time.time(),
         "wall_clock_s": wall_clock_s,
         "plan_cache": plan_cache_stats or {},
+        "failed_cells": list(failed_cells or []),
         "cells": cells,
     }
 
 
 def write_artifact(artifact: dict, out_dir: str | None = None) -> str:
-    """Write ``BENCH_feddif_<sweep>.json``; returns the path."""
+    """Write ``BENCH_feddif_<sweep>.json`` atomically; returns the path."""
     out_dir = default_out_dir() if out_dir is None else out_dir
     os.makedirs(out_dir, exist_ok=True)
     path = bench_path(artifact["sweep"], out_dir)
-    with open(path, "w") as f:
-        json.dump(artifact, f, indent=2, sort_keys=False,
-                  default=_json_default)
+    atomic_write_json(path, artifact, indent=2, sort_keys=False,
+                      default=_json_default)
     return path
+
+
+# Keys that legitimately differ between two runs of the same sweep (timing,
+# cache-warmth counters, filesystem locations).  ``strip_volatile`` removes
+# them so a resumed sweep's artifact can be diffed bit-for-bit against an
+# uninterrupted run's — the resume-parity contract checked by
+# ``benchmarks/resume_smoke.py`` and ``tests/test_resume_orchestration.py``.
+_VOLATILE_TOP = ("created_unix", "wall_clock_s", "plan_cache", "path",
+                 "manifest")
+_VOLATILE_CELL = ("wall_clock_s", "plan_cache")
+
+
+def strip_volatile(artifact: dict) -> dict:
+    """Copy of a sweep artifact with run-dependent fields removed."""
+    out = {k: v for k, v in artifact.items() if k not in _VOLATILE_TOP}
+    out["cells"] = [{k: v for k, v in cell.items()
+                     if k not in _VOLATILE_CELL}
+                    for cell in artifact.get("cells", [])]
+    return out
 
 
 def _json_default(obj: Any):

@@ -25,6 +25,7 @@ drives the same function, so sweep definitions exist in exactly one place
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Sequence
 
@@ -153,22 +154,31 @@ def _pick_engine(cell: SweepCell, engine: str) -> str:
 
 def run_cell(cell: SweepCell, seeds: Sequence[int],
              plan_cache: PlanCache | None = None,
-             engine: str = "auto") -> dict:
+             engine: str = "auto",
+             checkpoint_root: str | None = None) -> dict:
     """Run one sweep cell at every replicate seed; returns the JSON record.
 
     ``engine``: ``"auto"`` (vmap the seed axis when the strategy allows),
     ``"seed_vmap"``, or ``"loop"``; cells with ``fl.executor == "fleet"``
     always take the loop engine (the executor vmaps the client axis).
+
+    ``checkpoint_root`` (durable sweeps) forces the loop engine — the
+    seed-vmapped cohort bypasses ``run_federated`` and therefore the
+    :class:`~repro.fl.resume.RoundCheckpointer` seam — and gives each
+    replicate seed a round-checkpoint directory under it.
     """
     if not len(seeds):
         raise ValueError("run_cell needs at least one replicate seed")
     chosen = _pick_engine(cell, engine)
+    if checkpoint_root is not None:
+        chosen = "loop"
     cache_before = plan_cache.stats() if plan_cache is not None else None
     t0 = time.time()
     if chosen == "seed_vmap":
         results = run_replicates_vmapped(cell.spec, seeds, plan_cache)
     else:
-        results = run_replicates_loop(cell.spec, seeds, plan_cache)
+        results = run_replicates_loop(cell.spec, seeds, plan_cache,
+                                      checkpoint_root=checkpoint_root)
     wall = time.time() - t0
 
     # Per-cell plan-cache delta: how much of this cell's control plane was
@@ -212,6 +222,8 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
               out_dir: str | None = "auto", engine: str = "auto",
               executor: str = "host", planner: str = "host",
               plan_cache: PlanCache | None = None,
+              checkpoint_every: int = 0, resume: bool = False,
+              state_dir: str | None = None,
               log=None, **spec_overrides) -> dict:
     """Expand a registered sweep, run every cell, write the BENCH artifact.
 
@@ -235,6 +247,19 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
         then replay them from the shared cache.
       plan_cache: share one across sweeps if desired; default is a fresh
         cache per sweep (still shared across all cells *and* seeds).
+      checkpoint_every: round-checkpoint cadence R.  Any of
+        ``checkpoint_every > 0``, ``resume`` or ``state_dir`` makes the
+        sweep **durable**: a work-queue manifest, per-cell round
+        checkpoints and finished-cell records live under ``state_dir``
+        (default ``<artifact dir>/sweeps/<name>``), a crashing cell is
+        marked failed and isolated while the rest of the grid completes,
+        and a killed sweep is restartable with ``resume=True`` —
+        reproducing the *identical* BENCH artifact (modulo wall-clock; see
+        :func:`repro.experiments.artifacts.strip_volatile`).
+      resume: continue a previous durable run from its manifest: done cells
+        load their stored records, failed cells are retried, interrupted
+        cells restart from their latest round checkpoint.
+      state_dir: durable-state directory override.
       spec_overrides: forwarded to ``SweepDef.expand`` (e.g. tiny
         ``num_samples`` in tests).
 
@@ -244,15 +269,69 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
     cells = expand_sweep(name, smoke=smoke, executor=executor,
                          planner=planner, **spec_overrides)
     cache = plan_cache if plan_cache is not None else PlanCache()
+    durable = checkpoint_every > 0 or resume or state_dir is not None
+
+    manifest = None
+    if durable:
+        from repro.experiments import durability
+        state_dir = state_dir or durability.default_state_dir(name)
+        os.makedirs(state_dir, exist_ok=True)
+        config = {"sweep": name, "smoke": smoke,
+                  "seeds": [int(s) for s in seeds], "executor": executor,
+                  "planner": planner, "engine": engine,
+                  "checkpoint_every": int(checkpoint_every),
+                  "spec_overrides": spec_overrides}
+        manifest = durability.SweepManifest.open(
+            state_dir, name, config, [c.label for c in cells], resume)
+        if checkpoint_every <= 0:
+            # resume without an explicit cadence: adopt the stored one.
+            checkpoint_every = int(
+                manifest.data["config"].get("checkpoint_every") or 0) or 1
+        if resume and durability.load_plan_cache_file(state_dir, cache):
+            if log is not None:
+                log(f"{name},plan_cache,restored="
+                    f"{cache.stats()['entries']}")
+
     t0 = time.time()
     if planner == "jax":
         pre = prepopulate_plan_cache(cells, cache)
         if log is not None:
             log(f"{name},preplan,planned={pre['planned']},"
                 f"batches={pre['batches']},sec={time.time() - t0:.1f}")
+        if manifest is not None:
+            from repro.experiments import durability
+            durability.save_plan_cache_file(state_dir, cache)
+
     records = []
     for cell in cells:
-        rec = run_cell(cell, seeds, plan_cache=cache, engine=engine)
+        if manifest is not None:
+            if manifest.status(cell.label) == "done":
+                records.append(manifest.load_record(cell.label))
+                if log is not None:
+                    log(f"{name},{cell.label},resumed=done")
+                continue
+            manifest.mark(cell.label, "running")
+            cell = cell.with_fl(checkpoint_every=int(checkpoint_every))
+            ckpt_root = manifest.cell_checkpoint_root(cell.label)
+            try:
+                rec = run_cell(cell, seeds, plan_cache=cache, engine=engine,
+                               checkpoint_root=ckpt_root)
+            except Exception as e:          # noqa: BLE001 — cell isolation
+                # One broken cell must not sink the grid: record the error,
+                # keep going.  Preempted/KeyboardInterrupt (BaseException)
+                # still abort the whole sweep.
+                manifest.mark(cell.label, "failed",
+                              error=f"{type(e).__name__}: {e}")
+                if log is not None:
+                    log(f"{name},{cell.label},FAILED={type(e).__name__}")
+                continue
+            manifest.store_record(cell.label, rec)
+            manifest.mark(cell.label, "done")
+            from repro.experiments import durability
+            durability.save_plan_cache_file(state_dir, cache)
+            rec = manifest.load_record(cell.label)  # canonical JSON types
+        else:
+            rec = run_cell(cell, seeds, plan_cache=cache, engine=engine)
         if log is not None:
             s = rec["summary"]
             log(f"{name},{rec['label']},engine={rec['engine']},"
@@ -266,7 +345,11 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
         sweep_name=name, figure=defn.figure, axis=defn.axis, smoke=smoke,
         seeds=list(seeds), cells=records, executor=executor,
         planner=planner, plan_cache_stats=cache.stats(),
-        wall_clock_s=time.time() - t0)
+        wall_clock_s=time.time() - t0,
+        failed_cells=manifest.failed_cells() if manifest is not None
+        else None)
+    if manifest is not None:
+        artifact["manifest"] = manifest.path
     if out_dir is not None:
         if out_dir == "auto":
             out_dir = artifacts.default_out_dir()

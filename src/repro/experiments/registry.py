@@ -64,6 +64,13 @@ class SweepCell:
             return f"strategy={self.value}"
         return f"{self.axis}={self.value}/{self.strategy}"
 
+    def with_fl(self, **overrides) -> "SweepCell":
+        """Copy of this cell with ``FLConfig`` fields replaced (e.g. the
+        durable orchestrator stamping ``checkpoint_every``)."""
+        return dataclasses.replace(
+            self, spec=dataclasses.replace(
+                self.spec, fl=dataclasses.replace(self.spec.fl, **overrides)))
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepDef:

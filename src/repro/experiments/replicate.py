@@ -58,14 +58,25 @@ SEED_VMAP_STRATEGIES = ("fedavg", "feddif")
 
 
 def run_replicates_loop(spec: ExperimentSpec, seeds: Sequence[int],
-                        plan_cache: PlanCache | None = None
+                        plan_cache: PlanCache | None = None,
+                        checkpoint_root: str | None = None
                         ) -> list[FLResult]:
-    """One ``run_experiment`` per seed; plan cache shared across seeds."""
+    """One ``run_experiment`` per seed; plan cache shared across seeds.
+
+    ``checkpoint_root`` (durable sweeps) gives each replicate seed its own
+    round-checkpoint directory ``<root>/seed<seed>`` — a preempted cell
+    resumes mid-cohort: finished seeds rerun from their final checkpoint in
+    O(1 rounds), the interrupted seed from its last boundary.
+    """
+    import os
     results = []
     for s in seeds:
         spec_s = dataclasses.replace(
             spec, fl=dataclasses.replace(spec.fl, seed=int(s)))
-        results.append(run_experiment(spec_s, plan_cache=plan_cache))
+        ckpt_dir = (os.path.join(checkpoint_root, f"seed{int(s)}")
+                    if checkpoint_root is not None else None)
+        results.append(run_experiment(spec_s, plan_cache=plan_cache,
+                                      checkpoint_dir=ckpt_dir))
     return results
 
 

@@ -88,6 +88,33 @@ class HostExecutor:
             slots[c], _ = self.local_update(
                 slots[c], self.client_batches[c](), self.cfg.lr)
 
+    # ------------------------------------------------- round-state capture
+    # Persistent strategies (gossip, tthf) carry per-slot state across
+    # communication rounds; the resume seam (repro.fl.resume) round-trips it
+    # through these three hooks so a checkpoint taken under any executor
+    # restores onto the same executor bit-identically.
+
+    def capture_slots(self, slots: list | None):
+        """Host-resident copy of the persistent slot state (or ``None``)."""
+        return None if slots is None else jax.device_get(slots)
+
+    def slots_like(self, global_params: Params, num_slots: int):
+        """Shape/dtype template matching :meth:`capture_slots` output."""
+        leaf = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)  # noqa: E731
+        return [jax.tree.map(leaf, global_params) for _ in range(num_slots)]
+
+    def num_slots_of(self, saved) -> int:
+        """Slot count of a :meth:`capture_slots` capture (host: outer list).
+
+        The executor is authoritative here — the capture's pytree structure
+        alone is ambiguous (a model whose params are themselves a list looks
+        like a host slot-list)."""
+        return len(saved)
+
+    def adopt_slots(self, saved):
+        """Executor-native placement of a captured slot tree."""
+        return saved
+
     def run_round(self, sched: RoundSchedule, global_params: Params,
                   slots: list | None) -> tuple[Params, list | None]:
         c_slots = sched.num_slots
@@ -194,6 +221,23 @@ class FleetExecutor:
         for batch, active in zip(steps, actives):
             params, mom, _ = self._step(params, mom, batch, active, anchor)
         return params
+
+    # ------------------------------------------------- round-state capture
+
+    def capture_slots(self, slots: Params | None):
+        return None if slots is None else jax.device_get(slots)
+
+    def slots_like(self, global_params: Params, num_slots: int):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((num_slots,) + x.shape, x.dtype),
+            global_params)
+
+    def num_slots_of(self, saved) -> int:
+        """Slot count of a capture (fleet: the stacked leading axis)."""
+        return int(jax.tree.leaves(saved)[0].shape[0])
+
+    def adopt_slots(self, saved):
+        return jax.tree.map(jnp.asarray, saved)
 
     # ----------------------------------------------- overridable primitives
     # One round structure (run_round below), two placements:
@@ -421,6 +465,13 @@ class ShardedFleetExecutor(FleetExecutor):
         return fn
 
     # ------------------------- primitive overrides (round loop inherited)
+
+    def adopt_slots(self, saved):
+        # Restored slot state must land client-sharded, not replicated —
+        # the shard_map planes expect the leading axis on the mesh.
+        sh = jax.sharding.NamedSharding(self.mesh, P(CLIENT_AXIS))
+        return jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), sh), saved)
 
     def _broadcast(self, global_params: Params, num_slots: int) -> Params:
         return self._sh_bcast(global_params)

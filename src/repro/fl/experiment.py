@@ -65,7 +65,8 @@ def spec_model_bits(spec: ExperimentSpec) -> float:
     return model_bits(shapes, spec.fl.bits_per_param)
 
 
-def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
+def run_experiment(spec: ExperimentSpec, plan_cache=None,
+                   checkpoint_dir: str | None = None) -> FLResult:
     """Run one cell of a paper figure/table.
 
     ``plan_cache`` (a :class:`repro.core.diffusion.PlanCache`) is forwarded
@@ -75,9 +76,31 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
     ``spec.fl.executor`` selects the data plane (``"host"`` per-slot
     reference loop or ``"fleet"`` client-stacked vmap) — schedules and
     ledger charges are identical either way.
+
+    ``checkpoint_dir`` + ``spec.fl.checkpoint_every > 0`` makes the cell
+    durable: a :class:`~repro.fl.resume.RoundCheckpointer` serializes round
+    state every R rounds (including the per-client loader shuffle cursors,
+    so a resumed run replays the exact same batch order) and resumes from
+    the latest readable checkpoint in that directory.
     """
     train, test, part, loaders = load_experiment_data(spec)
     model = build_task_model(spec.task, spec.dim, spec.num_classes)
+
+    checkpointer = None
+    if checkpoint_dir is not None and spec.fl.checkpoint_every > 0:
+        from repro.fl.resume import RoundCheckpointer
+
+        def _capture():
+            return {"loader_epochs": [ld.epochs_drawn for ld in loaders]}
+
+        def _restore(extra):
+            for ld, e in zip(loaders, extra["loader_epochs"]):
+                ld.seek(int(e))
+
+        checkpointer = RoundCheckpointer(checkpoint_dir,
+                                         every=spec.fl.checkpoint_every,
+                                         capture_extra=_capture,
+                                         restore_extra=_restore)
 
     def client_epoch(i):
         return lambda: list(loaders[i].epoch())
@@ -96,4 +119,4 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None) -> FLResult:
 
     return run_federated(model.init, model.loss, batches, part.dsi,
                          part.data_sizes, eval_fn, spec.fl,
-                         plan_cache=plan_cache)
+                         plan_cache=plan_cache, checkpointer=checkpointer)

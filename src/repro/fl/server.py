@@ -107,6 +107,8 @@ class FLConfig:
                                      # "jax" jitted/batched device planner
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
     underlay: bool = False           # Appendix C-F (D2D reuses CUE PRBs)
+    checkpoint_every: int = 0        # durable round-state cadence R; 0 = off
+                                     # (see repro.fl.resume.RoundCheckpointer)
 
 
 @dataclasses.dataclass
@@ -144,7 +146,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                   dsi: np.ndarray, data_sizes: np.ndarray,
                   eval_fn: Callable[[Params], tuple[float, float]],
                   cfg: FLConfig,
-                  plan_cache: PlanCache | None = None) -> FLResult:
+                  plan_cache: PlanCache | None = None,
+                  checkpointer=None) -> FLResult:
     """Run one FL experiment.
 
     Args:
@@ -159,6 +162,10 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
       plan_cache: optional :class:`PlanCache` for FedDif strategies; only
         consulted when ``cfg.topology_seed`` is set (otherwise the wireless
         draw depends on ``cfg.seed`` and plans are not shareable).
+      checkpointer: optional :class:`~repro.fl.resume.RoundCheckpointer`.
+        When set, full round state is serialized every
+        ``checkpointer.every`` rounds and, if a readable checkpoint exists
+        in its directory, the loop resumes from it bit-identically.
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
     assert cfg.executor in EXECUTORS, cfg.executor
@@ -198,8 +205,21 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
     round_wall: list[float] = []
     slots = None            # persistent per-slot state (gossip / tthf)
+    start_t = 0
 
-    for t in range(cfg.rounds):
+    if checkpointer is not None:
+        state = checkpointer.restore(executor, global_params, cfg)
+        if state is not None:
+            start_t = state.step
+            global_params = state.params
+            slots = state.slots
+            ledger = state.ledger
+            acc_hist, loss_hist = state.acc_hist, state.loss_hist
+            dif_hist, iid_hist = state.dif_hist, state.iid_hist
+            round_wall = state.round_wall
+            checkpointer.apply_rng_state(rng, state.rng_state)
+
+    for t in range(start_t, cfg.rounds):
         # Control-plane stream: per-round and model-seed-independent when
         # topology_seed is set, so diffusion plans are cacheable across seeds.
         if cfg.topology_seed is not None:
@@ -231,6 +251,12 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
             a, l = eval_fn(global_params)
             acc_hist.append(float(a))
             loss_hist.append(float(l))
+
+        if checkpointer is not None and checkpointer.due(t + 1, cfg.rounds):
+            checkpointer.save(t + 1, executor, global_params, slots, ledger,
+                              cfg, acc_hist=acc_hist, loss_hist=loss_hist,
+                              dif_hist=dif_hist, iid_hist=iid_hist,
+                              round_wall=round_wall, rng=rng)
 
     return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
                     diffusion_rounds=dif_hist, iid_distance=iid_hist,

@@ -4,6 +4,12 @@
     PYTHONPATH=src python -m repro.launch.sweep --sweep all --full --seeds 3
     PYTHONPATH=src python -m repro.launch.sweep --list
 
+Durable mode (kill-safe, bit-identical resume)::
+
+    python -m repro.launch.sweep --sweep fig3_alpha --checkpoint-every 1
+    # ... SIGTERM / crash / power loss ...
+    python -m repro.launch.sweep --sweep fig3_alpha --resume
+
 Expands the named entry of the sweep registry
 (:mod:`repro.experiments.registry`), runs every cell with multi-seed
 replication (seed axis vmapped on the data plane where the strategy allows,
@@ -19,6 +25,7 @@ live in one place.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from repro.experiments import REGISTRY, run_sweep, sweep_names
@@ -55,6 +62,23 @@ def main(argv: list[str] | None = None) -> int:
                     help="artifact directory (default: "
                          "$REPRO_BENCH_DIR or benchmarks/results/ — the "
                          "same place benchmarks/run.py writes)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    metavar="R",
+                    help="durable mode: checkpoint full round state every "
+                         "R communication rounds; a killed sweep restarts "
+                         "bit-identically with --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue a previous durable run from its "
+                         "manifest (done cells load stored records, "
+                         "interrupted cells restart from their latest "
+                         "round checkpoint, failed cells are retried)")
+    ap.add_argument("--state-dir", default=None,
+                    help="durable-state directory (default: "
+                         "<artifact dir>/sweeps/<sweep>; with --sweep all, "
+                         "a per-sweep subdirectory of this path)")
+    ap.add_argument("--num-samples", type=int, default=None,
+                    help="override ExperimentSpec.num_samples per cell "
+                         "(small values make smoke/CI runs fast)")
     ap.add_argument("--list", action="store_true",
                     help="list registered sweeps and exit")
     args = ap.parse_args(argv)
@@ -77,19 +101,38 @@ def main(argv: list[str] | None = None) -> int:
     names = sweep_names() if args.sweep == "all" else [args.sweep]
     seeds = tuple(range(args.seeds))
     out_dir = args.out_dir if args.out_dir is not None else default_out_dir()
+    overrides = {}
+    if args.num_samples is not None:
+        overrides["num_samples"] = args.num_samples
+    durable = (args.checkpoint_every > 0 or args.resume
+               or args.state_dir is not None)
     for name in names:
         print(f"# === sweep {name} ({'smoke' if smoke else 'full'}, "
               f"seeds={list(seeds)}) ===", flush=True)
+        state_dir = args.state_dir
+        if state_dir is not None and args.sweep == "all":
+            state_dir = os.path.join(state_dir, name)
         artifact = run_sweep(name, smoke=smoke, seeds=seeds,
                              out_dir=out_dir, engine=args.engine,
                              executor=args.executor, planner=args.planner,
-                             log=lambda s: print(s, flush=True))
+                             checkpoint_every=args.checkpoint_every,
+                             resume=args.resume,
+                             state_dir=state_dir if durable else None,
+                             log=lambda s: print(s, flush=True),
+                             **overrides)
         pc = artifact["plan_cache"]
+        failed = artifact.get("failed_cells", [])
         print(f"# wrote {artifact['path']} "
               f"(cells={len(artifact['cells'])}, "
+              f"failed={len(failed)}, "
               f"plan_cache hits={pc.get('hits', 0)} "
               f"misses={pc.get('misses', 0)}, "
               f"{artifact['wall_clock_s']:.1f}s)", flush=True)
+        if "manifest" in artifact:
+            print(f"# manifest {artifact['manifest']}", flush=True)
+        for fc in failed:
+            print(f"# FAILED cell {fc['label']}: {fc['error']}",
+                  file=sys.stderr, flush=True)
     return 0
 
 

@@ -5,4 +5,6 @@ from repro.train.trainstep import (TrainState, init_train_state,
                                    make_train_step, make_eval_step,
                                    make_prefill_step, make_serve_step)
 from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
-                                    latest_step)
+                                    restore_latest, latest_step,
+                                    valid_steps, load_metadata,
+                                    atomic_write_json)

@@ -1,19 +1,36 @@
 """Checkpointing: pytree <-> .npz with path-flattened keys + metadata JSON.
 
 No orbax dependency; restores onto an existing pytree structure (shapes and
-dtypes validated leaf-by-leaf).  Atomic via write-to-temp + rename.
+dtypes validated leaf-by-leaf; :class:`jax.ShapeDtypeStruct` leaves work, so
+callers can describe a template without materializing it).
+
+Durability contract (the FL sweep orchestrator's resume path rides on it):
+
+* every file — array payload *and* metadata JSON — is written to a temp
+  file in the same directory and ``os.replace``-d into place, so a kill at
+  any instant leaves either the old bytes or the new bytes, never a torn
+  file;
+* the metadata JSON is written *after* the ``.npz`` and acts as the commit
+  marker: :func:`valid_steps` only reports steps whose pair is complete;
+* :func:`restore_latest` walks steps newest-first and falls back (with a
+  loud warning) past any checkpoint that is truncated, corrupt, or
+  structurally incompatible — a bad latest step costs one cadence of
+  progress, never a silent wrong restore.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import warnings
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest",
+           "latest_step", "valid_steps", "load_metadata",
+           "atomic_write_json"]
 
 _SEP = "/"
 
@@ -36,42 +53,82 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def atomic_write_json(path: str, obj: Any, **dump_kwargs) -> str:
+    """Serialize ``obj`` to JSON at ``path`` via temp-file + rename.
+
+    The write is all-or-nothing: a reader (or a process killed mid-write)
+    sees either the previous contents or the complete new document, never a
+    truncated one.  Shared by checkpoints, sweep manifests and the BENCH
+    artifact writers.
+    """
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, **dump_kwargs)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def _npz_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def _meta_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.json")
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     metadata: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    path = _npz_path(directory, step)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
             np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
     meta = dict(metadata or {})
     meta["step"] = step
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
+    # Written last: the metadata JSON is the commit marker valid_steps keys
+    # on, so a kill between the two writes leaves an ignorable orphan .npz.
+    atomic_write_json(_meta_path(directory, step), meta)
     return path
 
 
 def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
-    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for path_k, leaf in flat_like:
-        key = _SEP.join(_path_str(p) for p in path_k)
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        if arr.shape != leaf.shape:
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        leaves.append(arr.astype(leaf.dtype))
+    path = _npz_path(directory, step)
+    with np.load(path) as data:
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_k, leaf in flat_like:
+            key = _SEP.join(_path_str(p) for p in path_k)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
+
+
+def load_metadata(directory: str, step: int) -> dict:
+    """The metadata JSON written alongside step ``step``'s arrays."""
+    with open(_meta_path(directory, step)) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> int | None:
@@ -80,3 +137,44 @@ def latest_step(directory: str) -> int | None:
     steps = [int(f[5:13]) for f in os.listdir(directory)
              if f.startswith("ckpt_") and f.endswith(".npz")]
     return max(steps) if steps else None
+
+
+def valid_steps(directory: str) -> list[int]:
+    """Steps with a complete (npz, metadata) pair, ascending.
+
+    A checkpoint whose metadata JSON is missing was interrupted before its
+    commit marker landed; it is invisible here and to
+    :func:`restore_latest`.
+    """
+    if not os.path.isdir(directory):
+        return []
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return sorted(s for s in steps
+                  if os.path.exists(_meta_path(directory, s)))
+
+
+def restore_latest(directory: str, like: Any
+                   ) -> tuple[int, Any, dict] | None:
+    """Restore the newest readable checkpoint: ``(step, tree, metadata)``.
+
+    Walks :func:`valid_steps` newest-first.  A step that fails to load —
+    truncated/corrupt ``.npz``, unparseable metadata, missing leaves, shape
+    mismatch — is skipped with a :class:`RuntimeWarning` naming the file and
+    the error, and the previous step is tried instead.  Returns ``None``
+    when no checkpoint (or no readable one) exists; it never silently
+    restores wrong bytes.
+    """
+    for step in reversed(valid_steps(directory)):
+        try:
+            meta = load_metadata(directory, step)
+            tree = restore_checkpoint(directory, step, like)
+            return step, tree, meta
+        except Exception as e:                      # noqa: BLE001 — any
+            # unreadable checkpoint (zip truncation, JSON decode, missing
+            # leaf) must fall through to the previous step, loudly.
+            warnings.warn(
+                f"checkpoint step {step} in {directory!r} is unreadable "
+                f"({type(e).__name__}: {e}); falling back to the previous "
+                f"step", RuntimeWarning, stacklevel=2)
+    return None

@@ -1,0 +1,159 @@
+"""Durability tests for repro.train.checkpoint — the substrate the FL sweep
+resume path (repro.fl.resume / repro.experiments.durability) rides on.
+
+Covers the contract spelled out in the module docstring: atomic temp+rename
+writes, the metadata-JSON commit marker, non-uniform pytree round-trips,
+``valid_steps``/``latest_step`` ordering, and ``restore_latest``'s loud
+fallback past truncated/corrupt checkpoints (never a silent wrong restore).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.train import (atomic_write_json, latest_step, load_metadata,
+                         restore_checkpoint, restore_latest, save_checkpoint,
+                         valid_steps)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return (len(la) == len(lb)
+            and all(np.array_equal(np.asarray(x), np.asarray(y))
+                    and np.asarray(x).dtype == np.asarray(y).dtype
+                    for x, y in zip(la, lb)))
+
+
+def _mixed_tree():
+    """Non-uniform pytree: nested dicts, a list, mixed dtypes, a 0-d leaf."""
+    return {
+        "params": [{"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                    "b": np.ones(4, np.float64)},
+                   {"w": np.full((2, 2), -3, np.int32)}],
+        "counters": {"steps": np.array(17, np.int64),
+                     "mask": np.array([True, False, True])},
+    }
+
+
+# ------------------------------------------------------------- round-trips
+
+def test_nonuniform_pytree_roundtrip(tmp_path):
+    tree = _mixed_tree()
+    save_checkpoint(str(tmp_path), 5, tree, metadata={"note": "x"})
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = restore_checkpoint(str(tmp_path), 5, like)
+    assert _tree_equal(tree, out)
+    assert load_metadata(str(tmp_path), 5)["note"] == "x"
+    assert load_metadata(str(tmp_path), 5)["step"] == 5
+
+
+def test_restore_validates_shape_and_structure(tmp_path):
+    tree = _mixed_tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((7,) + x.shape, x.dtype), tree)
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(str(tmp_path), 1, bad)
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_checkpoint(str(tmp_path), 1, {"other": tree["counters"]})
+
+
+def test_no_temp_debris_after_saves(tmp_path):
+    for step in (1, 2, 3):
+        save_checkpoint(str(tmp_path), step, _mixed_tree())
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+# ------------------------------------------------------- step enumeration
+
+def test_valid_steps_and_latest_step_ordering(tmp_path):
+    tree = {"x": np.zeros(2)}
+    for step in (3, 10, 2):          # written out of order
+        save_checkpoint(str(tmp_path), step, tree)
+    assert valid_steps(str(tmp_path)) == [2, 3, 10]
+    assert latest_step(str(tmp_path)) == 10
+    assert valid_steps(str(tmp_path / "nope")) == []
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_npz_without_commit_marker_is_invisible(tmp_path):
+    """A kill between the npz write and the metadata write leaves an orphan
+    npz; valid_steps must not report it and restore_latest must skip it."""
+    tree = {"x": np.arange(3.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    os.remove(tmp_path / "ckpt_00000002.json")     # simulate the torn pair
+    assert valid_steps(str(tmp_path)) == [1]
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    step, out, _ = restore_latest(str(tmp_path), like)
+    assert step == 1 and _tree_equal(tree, out)
+
+
+# ----------------------------------------------------- corruption fallback
+
+def test_restore_latest_falls_back_past_truncated_npz(tmp_path):
+    tree = {"x": np.arange(8.0), "y": {"z": np.ones((2, 2), np.int32)}}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    npz2 = tmp_path / "ckpt_00000002.npz"
+    npz2.write_bytes(npz2.read_bytes()[:40])       # truncate mid-zip
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        step, out, meta = restore_latest(str(tmp_path), like)
+    assert step == 1
+    assert _tree_equal(tree, out)
+    assert meta["step"] == 1
+
+
+def test_restore_latest_falls_back_past_corrupt_metadata(tmp_path):
+    tree = {"x": np.arange(4.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    (tmp_path / "ckpt_00000002.json").write_text("{not json")
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        step, out, _ = restore_latest(str(tmp_path), like)
+    assert step == 1 and _tree_equal(tree, out)
+
+
+def test_restore_latest_returns_none_when_nothing_readable(tmp_path):
+    like = {"x": jax.ShapeDtypeStruct((2,), np.float32)}
+    assert restore_latest(str(tmp_path / "empty"), like) is None
+    tree = {"x": np.zeros(2, np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    (tmp_path / "ckpt_00000001.npz").write_bytes(b"garbage")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert restore_latest(str(tmp_path), like) is None
+
+
+# ------------------------------------------------------- atomic JSON write
+
+def test_atomic_write_json_roundtrip_and_replace(tmp_path):
+    path = str(tmp_path / "doc.json")
+    atomic_write_json(path, {"a": 1})
+    atomic_write_json(path, {"a": 2, "b": [1, 2, 3]}, indent=2)
+    with open(path) as f:
+        assert json.load(f) == {"a": 2, "b": [1, 2, 3]}
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_atomic_write_json_failure_preserves_old_contents(tmp_path):
+    """A writer that dies mid-serialization must leave the previous document
+    intact — the temp file never replaces the target."""
+    path = str(tmp_path / "doc.json")
+    atomic_write_json(path, {"good": True})
+
+    class Unserializable:
+        pass
+
+    with pytest.raises(TypeError):
+        atomic_write_json(path, {"bad": Unserializable()})
+    with open(path) as f:
+        assert json.load(f) == {"good": True}
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]

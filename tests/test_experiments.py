@@ -1,6 +1,7 @@
 """Sweep registry / orchestrator / plan-cache tests (repro.experiments)."""
 import dataclasses
 import json
+import os
 
 import numpy as np
 import pytest
@@ -223,3 +224,133 @@ def test_smallest_sweep_end_to_end_writes_valid_artifact(tmp_path):
         pc = c["plan_cache"]
         assert set(pc) == {"hits", "misses", "entries"}
         assert pc["hits"] + pc["misses"] >= 1
+
+
+# ------------------------------------------------- durability: RNG streams
+
+def test_checkpoint_audits_every_rng_stream_position(tmp_path, monkeypatch):
+    """The round checkpoint must carry every RNG stream position the run
+    consumes: the per-client data-shuffle cursors and the model-seed
+    bit-generator state.  (The control-plane and churn streams are stateless
+    ``[seed, t, tag]`` draws and need no stored position.)  An interrupted
+    run's checkpoint at step k must equal a clean run's checkpoint at the
+    same step, byte for byte on these fields."""
+    from repro.fl.experiment import run_experiment
+    from repro.fl.resume import Preempted, RoundCheckpointer
+    from repro.fl.server import FLConfig
+    from repro.train import load_metadata, valid_steps
+
+    fl = FLConfig(strategy="feddif", num_clients=4, num_models=4, rounds=3,
+                  topology_seed=None, churn_rate=0.25, batch_size=8,
+                  checkpoint_every=1, local_epochs=2)
+    spec = ExperimentSpec(task="logistic", num_samples=400, fl=fl)
+
+    clean_dir = str(tmp_path / "clean")
+    run_experiment(spec, checkpoint_dir=clean_dir)
+
+    killed_dir = str(tmp_path / "killed")
+    with monkeypatch.context() as m:
+        m.setattr(RoundCheckpointer, "fail_after_save", 1)
+        with pytest.raises(Preempted):
+            run_experiment(spec, checkpoint_dir=killed_dir)
+    run_experiment(spec, checkpoint_dir=killed_dir)
+
+    steps = valid_steps(clean_dir)
+    assert steps and steps == valid_steps(killed_dir)
+    for step in steps:
+        a = load_metadata(clean_dir, step)
+        b = load_metadata(killed_dir, step)
+        # data-shuffle stream: per-client epoch cursors, advanced by
+        # local_epochs per training session — nonzero and exactly restored
+        assert a["extra"]["loader_epochs"] == b["extra"]["loader_epochs"]
+        assert any(e > 0 for e in a["extra"]["loader_epochs"])
+        # model-seed stream: full PCG64 bit-generator state (exact 128-bit
+        # ints — JSON carries Python ints losslessly)
+        assert a["rng_state"] == b["rng_state"]
+        # and the cumulative Eq.-15 ledger
+        assert a["ledger"] == b["ledger"]
+
+
+def test_loader_epoch_cursor_replays_batch_order():
+    from repro.data.pipeline import ClientLoader
+
+    x = np.arange(40, dtype=np.float32).reshape(20, 2)
+    y = np.arange(20) % 4
+    a = ClientLoader(x, y, batch_size=4, seed=11)
+    for _ in range(3):
+        list(a.epoch())
+    assert a.epochs_drawn == 3
+    reference = [b["x"].tolist() for b in a.epoch()]
+
+    b = ClientLoader(x, y, batch_size=4, seed=11)
+    b.seek(3)                       # resume path repositions the stream
+    replay = [bb["x"].tolist() for bb in b.epoch()]
+    assert replay == reference
+
+
+def test_plan_cache_state_dict_roundtrip_replays():
+    """PlanCache state_dict/load_state_dict round-trips entries, counters
+    and plan contents — the durable sweep's plan_cache.json contract."""
+    from repro.core.diffusion import PlanCache
+
+    cache = PlanCache()
+    cell = next(c for c in _tiny_cells() if c.strategy == "feddif")
+    run_replicates_loop(cell.spec, (0,), cache)
+    assert cache.stats()["entries"] >= 1
+
+    state = json.loads(json.dumps(cache.state_dict()))   # disk round-trip
+    restored = PlanCache.from_state_dict(state)
+    assert restored.stats() == cache.stats()
+
+    # replaying from the restored cache reproduces the identical run
+    r_orig = run_replicates_loop(cell.spec, (0,), PlanCache())
+    r_rest = run_replicates_loop(cell.spec, (0,), restored)
+    assert r_rest[0].accuracy == r_orig[0].accuracy
+    assert r_rest[0].ledger == r_orig[0].ledger
+
+
+# --------------------------------------------- durability: artifact writes
+
+def test_bench_write_is_atomic_under_partial_write(tmp_path, monkeypatch):
+    """Kill the writer mid-serialization: the previous artifact must remain
+    intact on disk (temp+rename — no torn JSON)."""
+    import repro.train.checkpoint as ckpt_mod
+    from repro.experiments.artifacts import bench_file, write_bench_json
+
+    write_bench_json("torn", {"generation": 1}, str(tmp_path))
+    real_dump = json.dump
+
+    def dying_dump(obj, f, **kw):
+        f.write('{"generation": 2, "partial": [1, 2')   # torn bytes
+        raise OSError("disk full mid-write")
+
+    with monkeypatch.context() as m:
+        m.setattr(ckpt_mod.json, "dump", dying_dump)
+        with pytest.raises(OSError):
+            write_bench_json("torn", {"generation": 2}, str(tmp_path))
+
+    with open(bench_file("torn", str(tmp_path))) as f:
+        assert json.load(f) == {"generation": 1}        # old bytes intact
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+    assert json.dump is real_dump
+
+
+def test_artifact_always_reports_failed_cells(tmp_path):
+    art = run_sweep("fig5_gamma_min", smoke=True, seeds=(0,),
+                    out_dir=str(tmp_path), num_samples=300)
+    assert art["failed_cells"] == []                    # key always present
+    on_disk = json.load(open(bench_path("fig5_gamma_min", str(tmp_path))))
+    assert on_disk["failed_cells"] == []
+
+
+def test_strip_volatile_drops_only_run_dependent_fields(tmp_path):
+    from repro.experiments import strip_volatile
+    art = run_sweep("fig5_gamma_min", smoke=True, seeds=(0,),
+                    out_dir=str(tmp_path), num_samples=300)
+    s = strip_volatile(art)
+    for k in ("created_unix", "wall_clock_s", "plan_cache", "path"):
+        assert k not in s
+    for c in s["cells"]:
+        assert "wall_clock_s" not in c and "plan_cache" not in c
+        assert c["comm"]["subframes"] > 0               # physics retained
+    assert s["failed_cells"] == []
