@@ -12,6 +12,14 @@ all-reduce / reduce-scatter / all-to-all / collective-permute in the
 partitioned HLO (per-device).  MODEL_FLOPS uses 6·N·D (dense) or
 6·N_active·D (MoE) for training, 2·N·D for single forward passes.
 
+Two helpers serve the FL data-plane benches (``fleet_scaling``):
+:func:`measure_machine_peak` calibrates this host's achievable fp32 GEMM
+FLOP/s (the TPU constants below describe the *target* hardware — a CI CPU
+needs its own peak for utilization fractions to mean anything), and
+:func:`fl_round_roofline` turns one communication round's analytic FLOP /
+bytes-moved model (Eq. 15 communication ledger terms) plus its measured
+wall-clock into achieved FLOP/s vs machine peak.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--csv]
 """
 from __future__ import annotations
@@ -24,6 +32,59 @@ import os
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
+
+
+def measure_machine_peak(n: int = 1024, trials: int = 5) -> float:
+    """Measured fp32 GEMM FLOP/s of this host (calibration peak).
+
+    One jitted (n, n) @ (n, n) fp32 matmul, best-of-``trials`` — a
+    deliberately simple, saturating workload whose 2·n³ FLOP count is
+    exact.  Used as the roofline denominator on machines that are not the
+    197-TFLOP/s target chip.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    x = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    jax.block_until_ready(f(x))
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.time()
+        jax.block_until_ready(f(x))
+        best = min(best, time.time() - t0)
+    return 2.0 * n ** 3 / best
+
+
+def fl_round_roofline(*, param_count: float, train_rows: float,
+                      clients: int, d2d_models: float, uldl_models: float,
+                      round_s: float, mix_rows: float = 1.0,
+                      bits_per_param: int = 32,
+                      peak_flops: float | None = None) -> dict:
+    """Roofline readout for ONE FL communication round.
+
+    FLOP model: 6·P per trained sample row (forward 2·P + backward 4·P for
+    a dense model of P parameters) plus 2·C·P per mixed/aggregated output
+    row (the Eq. 10/11 weighted reduction).  Bytes moved on the wire are
+    the Eq.-15 ledger terms — every transmitted model (D2D diffusion hop,
+    uplink or downlink) moves one P-parameter payload.  ``round_s`` is the
+    measured steady-state round wall-clock; ``utilization`` is achieved
+    FLOP/s over :func:`measure_machine_peak` (or ``peak_flops``).
+    """
+    peak = peak_flops if peak_flops is not None else measure_machine_peak()
+    flops = (6.0 * param_count * train_rows
+             + 2.0 * param_count * clients * mix_rows)
+    moved = (d2d_models + uldl_models) * param_count * bits_per_param / 8.0
+    achieved = flops / max(round_s, 1e-9)
+    return {
+        "machine_peak_flops": peak,
+        "round_flops": flops,
+        "round_bytes_moved": moved,
+        "achieved_flops": achieved,
+        "utilization": achieved / max(peak, 1e-9),
+        "wire_bytes_per_s": moved / max(round_s, 1e-9),
+    }
 
 SHAPE_TOKENS = {
     "train_4k": 256 * 4096,

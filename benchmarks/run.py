@@ -294,83 +294,183 @@ def executor_speedup(full: bool):
 
 def fleet_scaling(full: bool):
     """Large-N data planes: ``fleet`` (single-device client-stacked vmap) vs
-    ``sharded`` (shard_map over a ``("clients",)`` mesh) at growing N, with
-    the ``host`` reference run at the smallest N for three-way bit-identical
-    ledger parity.  Schedules/ledgers are executor-independent by
-    construction, so the comparison signal is the **data plane's**
-    steady-state wall-clock — ``FLResult.round_wall_s`` with the first
-    (compile) round dropped; the shared host control plane (planner,
-    schedule build) is excluded by construction.  The task is the paper's
-    CNN: convolution-heavy sessions are where device-level client
-    parallelism beats a single device's intra-op threads.  Run under
+    ``sharded`` (shard_map over the 2-D ``("clients", "model")`` mesh) at
+    growing N, with the ``host`` reference run at the smallest N for
+    three-way bit-identical ledger parity and a ``sharded`` arm with
+    ``shard_overlap="off"`` at the largest N isolating the fused
+    comm/compute-overlapped round plane's win over the op-by-op plane.
+    Schedules/ledgers are executor-independent by construction, so the
+    comparison signal is the **data plane's** steady-state wall-clock —
+    ``FLResult.round_wall_s`` with the first (compile) round dropped; the
+    shared host control plane (planner, schedule build) is excluded by
+    construction.  Up to N=256 the task is the paper's CNN under FedDif;
+    at N≥1024 the Hungarian auction control plane is O(N³), so the data
+    plane is exercised with the auction-free ``d2d_random_walk`` diffusion
+    on the FCN, with the per-client shard pinned small so the round is
+    comm-dominated (the fleet-scale regime the overlap targets).  Run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` for a K-device
-    CPU mesh (``main()`` forces K=2 when this bench runs standalone); on
-    one device the two planes are the same program and the speedup checks
-    are skipped (also skipped by the budget gate via ``device_count``).
+    CPU mesh (``main()`` forces K=2 when this bench runs standalone; CI's
+    mesh2d job uses K=8); on one device the planes are the same program
+    and the speedup checks are skipped (also skipped by the budget gate
+    via ``device_count``).  Also emits the per-phase wall-clock breakdown
+    (train / hop_collective / mix / plan — from a short profiled op-by-op
+    rerun, since the fused round cannot be sub-timed) and the
+    :mod:`benchmarks.roofline` readout for one round at the largest N
+    (achieved FLOP/s and wire bytes vs the machine's measured GEMM peak).
     Emits ``BENCH_fleet_scaling.json``.
     """
     import jax
+    from benchmarks.roofline import fl_round_roofline, measure_machine_peak
     from repro.experiments.artifacts import write_bench_json
     from repro.fl import ExperimentSpec, FLConfig, run_experiment
+    from repro.fl.experiment import load_experiment_data, spec_model_bits
 
     n_devices = len(jax.devices())
-    sizes = (20, 64, 256) if full else (20, 64)
-    rounds = 4 if full else 3
-    cells, ledgers = [], {}
+    sizes = (20, 64, 256, 1024) if full else (20, 64)
+    # Small-N arms run 4 rounds; the N≥1024 arms run 6.  The fused sharded
+    # plane compiles one program per round *signature*; signature
+    # normalization (step-count padding + hop-wave bucketing, see
+    # ``ShardedFleetExecutor``) bounds steady state to two signatures, but
+    # their compiles can land as late as rounds 1 and 3 — with fewer
+    # rounds min(round_wall_s[1:]) would report a compile, not steady
+    # state.  min (not mean) is the steady statistic: forced multi-device
+    # CPU meshes oversubscribe the host and collective rendezvous can
+    # stall a round by whole seconds, on either plane.
+    rounds = 4
+    big_rounds = 6
+    big_n = max(sizes)
+
+    def make_spec(n, executor, rounds=None, **fl_kw):
+        # experiment.py trains on the test_frac side of the split, so this
+        # is ~40 train samples (2–3 batches) per client up to N=150.  At
+        # N≥1024 the per-client shard is pinned small (5 rows/client): at
+        # fleet scale the round is comm-dominated — D2D hop traffic, not
+        # local SGD, sets the wall-clock — which is the regime the
+        # overlapped plane exists for (and the one the roofline reports).
+        task = "cnn" if n <= 256 else "fcn"
+        strategy = "feddif" if n <= 256 else "d2d_random_walk"
+        if rounds is None:
+            rounds = 4 if n <= 256 else big_rounds
+        return ExperimentSpec(
+            task=task, alpha=0.5,
+            num_samples=min(200 * n, 30000) if n <= 256 else 5 * n,
+            fl=FLConfig(strategy=strategy, rounds=rounds, num_clients=n,
+                        num_models=n, seed=0, topology_seed=0,
+                        max_diffusion_rounds=6 if n <= 256 else 3,
+                        executor=executor, **fl_kw))
+
+    arms = []
     for n in sizes:
-        executors = ("host", "fleet", "sharded") if n == sizes[0] \
-            else ("fleet", "sharded")
-        for executor in executors:
-            # experiment.py trains on the test_frac side of the split, so
-            # this is ~40 train samples (2–3 batches) per client.
-            spec = ExperimentSpec(
-                task="cnn", alpha=0.5, num_samples=min(200 * n, 30000),
-                fl=FLConfig(strategy="feddif", rounds=rounds, num_clients=n,
-                            num_models=n, seed=0, topology_seed=0,
-                            max_diffusion_rounds=6, executor=executor))
-            t0 = time.time()
-            r = run_experiment(spec)
-            dt = time.time() - t0
-            steady = min(r.round_wall_s[1:])
-            ledgers[(n, executor)] = r.ledger.as_dict()
-            cells.append({"clients": n, "executor": executor,
-                          "wall_clock_s": dt, "round_s": steady,
-                          "acc": max(r.accuracy),
-                          "subframes": r.ledger.subframes})
-            print(f"fleet_scaling,clients={n},executor={executor},"
-                  f"sec={dt:.1f},round_s={steady:.2f},"
-                  f"acc={max(r.accuracy):.4f},"
-                  f"subframes={r.ledger.subframes}", flush=True)
+        if n == sizes[0]:
+            arms.append((n, "host", make_spec(n, "host")))
+        arms.append((n, "fleet", make_spec(n, "fleet")))
+        arms.append((n, "sharded", make_spec(n, "sharded")))
+    arms.append((big_n, "sharded_off",
+                 make_spec(big_n, "sharded", shard_overlap="off")))
+
+    cells, ledgers, results = [], {}, {}
+    for n, label, spec in arms:
+        t0 = time.time()
+        r = run_experiment(spec)
+        dt = time.time() - t0
+        steady = min(r.round_wall_s[1:])
+        ledgers[(n, label)] = r.ledger.as_dict()
+        results[(n, label)] = r
+        cells.append({"clients": n, "executor": label,
+                      "task": spec.task, "strategy": spec.fl.strategy,
+                      "wall_clock_s": dt, "round_s": steady,
+                      "acc": max(r.accuracy),
+                      "subframes": r.ledger.subframes})
+        print(f"fleet_scaling,clients={n},executor={label},"
+              f"sec={dt:.1f},round_s={steady:.2f},"
+              f"acc={max(r.accuracy):.4f},"
+              f"subframes={r.ledger.subframes}", flush=True)
     n0 = sizes[0]
     ledger_parity = (ledgers[(n0, "host")] == ledgers[(n0, "fleet")]
                      == ledgers[(n0, "sharded")])
     assert ledger_parity, "host/fleet/sharded must charge identical ledgers"
     assert all(ledgers[(n, "fleet")] == ledgers[(n, "sharded")]
                for n in sizes), "fleet/sharded ledgers must agree at every N"
+    assert ledgers[(big_n, "sharded_off")] == ledgers[(big_n, "sharded")], \
+        "overlap on/off must charge the identical schedule"
     by = {(c["clients"], c["executor"]): c["round_s"] for c in cells}
     speedups = {n: by[(n, "fleet")] / max(by[(n, "sharded")], 1e-9)
                 for n in sizes}
-    big_n = max(n for n in sizes if n >= 64)
+    overlap_speedup = (by[(big_n, "sharded_off")]
+                       / max(by[(big_n, "sharded")], 1e-9))
+
+    # --- per-phase breakdown (satellite of the overlap work): a short
+    # profiled rerun on the op-by-op plane — the fused round is one device
+    # call and cannot be sub-timed — so overlap wins are attributable to
+    # phases, not just end-to-end deltas.
+    phases = {}
+    for label in ("fleet", "sharded"):
+        spec = make_spec(big_n, label, rounds=2, profile_phases=True)
+        r = run_experiment(spec)
+        ph = r.phase_s[-1] if r.phase_s else {}
+        phases[label] = {k: round(v, 4) for k, v in sorted(ph.items())}
+        print(f"fleet_scaling,phase_breakdown,executor={label},"
+              f"clients={big_n}," +
+              ",".join(f"{k}_s={v:.3f}" for k, v in sorted(ph.items())),
+              flush=True)
+
+    # --- roofline readout for one steady round at the largest N on the
+    # overlapped sharded arm: analytic FLOPs/bytes (Eq. 15 ledger terms)
+    # vs the machine's measured GEMM peak.
+    spec = make_spec(big_n, "sharded")
+    big_arm_rounds = spec.fl.rounds
+    _, _, part, _ = load_experiment_data(spec, with_loaders=False)
+    r = results[(big_n, "sharded")]
+    led = ledgers[(big_n, "sharded")]
+    hops = float(np.mean(r.diffusion_rounds))
+    roofline = fl_round_roofline(
+        param_count=spec_model_bits(spec) / spec.fl.bits_per_param,
+        train_rows=float(np.sum(part.data_sizes)) * (1.0 + hops),
+        clients=big_n,
+        d2d_models=(led["transmitted_models"] - led["uplink_models"])
+        / big_arm_rounds,
+        uldl_models=(led["uplink_models"] + led["downlink_models"])
+        / big_arm_rounds,
+        round_s=by[(big_n, "sharded")],
+        bits_per_param=spec.fl.bits_per_param,
+        peak_flops=measure_machine_peak())
+    print(f"fleet_scaling,roofline,clients={big_n},"
+          f"achieved_gflops={roofline['achieved_flops']/1e9:.2f},"
+          f"peak_gflops={roofline['machine_peak_flops']/1e9:.2f},"
+          f"utilization={roofline['utilization']:.4f},"
+          f"wire_mb_per_round={roofline['round_bytes_moved']/1e6:.1f}",
+          flush=True)
+
     record = {
-        "device_count": n_devices, "sizes": list(sizes), "rounds": rounds,
-        "task": "cnn", "cells": cells, "ledger_parity": ledger_parity,
+        "device_count": n_devices, "host_cpus": os.cpu_count() or 1,
+        "sizes": list(sizes), "rounds": rounds,
+        "big_n_rounds": big_arm_rounds,
+        "cells": cells, "ledger_parity": ledger_parity,
         "speedup_by_n": {str(n): s for n, s in speedups.items()},
         "speedup_at_scale": speedups[big_n], "scale_n": big_n,
+        "overlap_speedup": overlap_speedup, "overlap_scale_n": big_n,
+        "phases": phases,
+        "roofline": roofline,
         "max_wall_clock_s": max(c["wall_clock_s"] for c in cells),
     }
     write_bench_json("fleet_scaling", record)
     print(f"fleet_scaling,devices={n_devices},"
           f"steady_speedup_n{big_n}={speedups[big_n]:.2f}x,"
+          f"overlap_speedup_n{big_n}={overlap_speedup:.2f}x,"
           f"ledger_parity={ledger_parity}", flush=True)
     if speedups[big_n] <= 0.85 and n_devices > 1:
         # check_budgets (benchmarks/budgets.json) is the regression gate;
         # the in-bench hard failure is scoped to the topology the 0.85
-        # floor was calibrated on (forced 2-device CPU mesh) so a full
-        # suite run on exotic hardware reports instead of aborting the
+        # floor was calibrated on — a forced 2-device CPU mesh with at
+        # least 2 host cores behind it.  With forced devices oversubscribing
+        # a single core there is no parallelism to win, only dispatch and
+        # collective-rendezvous overhead to pay (fleet's single-device vmap
+        # pays neither), so the comparison reports instead of aborting the
         # benches queued after this one.
         msg = (f"sharded far behind fleet at N={big_n} on a "
                f"{n_devices}-device mesh (got {speedups[big_n]:.2f}x)")
-        if n_devices == 2 and jax.default_backend() == "cpu":
+        if (n_devices == 2 and jax.default_backend() == "cpu"
+                and (os.cpu_count() or 1) >= 2):
             raise AssertionError(msg)
         print(f"fleet_scaling,WARNING,{msg}", flush=True)
 
@@ -574,9 +674,12 @@ def check_budgets(budgets_path: str = "benchmarks/budgets.json") -> int:
     ``min``/``max`` checks fail when the artifact value crosses the budget
     beyond the relative ``tolerance`` (``value < min·(1−tol)`` resp.
     ``value > max·(1+tol)``); ``equals`` checks are exact.  ``key`` is a
-    dotted path into the artifact JSON.  An optional ``when`` guard skips a
-    check unless another artifact field satisfies ``gte`` (e.g. speedup
-    gates only bind on multi-device artifacts).  A missing artifact is a
+    dotted path into the artifact JSON.  An optional ``when`` guard — one
+    condition dict or a list of them, all of which must hold — skips a
+    check unless the named artifact fields satisfy every bound given
+    (``gte`` and/or ``lte``) — e.g. speedup gates only bind on the exact
+    device count and minimum host core count they were calibrated
+    against.  A missing artifact is a
     failure — the gate exists so CI cannot silently stop producing the
     number.  Returns a process exit code (0 = within budget).
     """
@@ -601,15 +704,25 @@ def check_budgets(budgets_path: str = "benchmarks/budgets.json") -> int:
         with open(path) as f:
             art = json.load(f)
         for chk in entry["checks"]:
-            cond = chk.get("when")
-            if cond is not None:
+            conds = chk.get("when")
+            if isinstance(conds, dict):
+                conds = [conds]
+            skip = None
+            for cond in conds or ():
                 try:
-                    if not lookup(art, cond["key"]) >= cond["gte"]:
-                        print(f"budget_skip,{gate},{chk['key']},"
-                              f"{cond['key']}<{cond['gte']}", flush=True)
-                        continue
+                    guard = lookup(art, cond["key"])
+                    if "gte" in cond and not guard >= cond["gte"]:
+                        skip = f"{cond['key']}<{cond['gte']}"
+                        break
+                    if "lte" in cond and not guard <= cond["lte"]:
+                        skip = f"{cond['key']}>{cond['lte']}"
+                        break
                 except (KeyError, TypeError):
                     pass        # guard field absent: check applies
+            if skip is not None:
+                print(f"budget_skip,{gate},{chk['key']},{skip}",
+                      flush=True)
+                continue
             try:
                 value = lookup(art, chk["key"])
             except (KeyError, TypeError):

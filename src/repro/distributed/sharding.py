@@ -22,11 +22,17 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
            "needs_fsdp", "named", "client_stacked_specs", "client_shardings",
-           "MODEL_AXIS", "DATA_AXIS", "CLIENT_AXIS"]
+           "fl_stacked_specs", "fl_shardings", "fl_batch_specs",
+           "MODEL_AXIS", "DATA_AXIS", "CLIENT_AXIS", "FL_AXES"]
 
 MODEL_AXIS = "model"
 DATA_AXIS = "data"
 CLIENT_AXIS = "clients"
+# The 2-D FL mesh of repro.launch.mesh.make_fl_mesh.  In "train layout" the
+# leading client axis shards over the *combined* axis (every device holds an
+# equal block of whole clients); the hop plane temporarily re-lays params
+# feature-split over MODEL_AXIS (see executors.ShardedFleetExecutor).
+FL_AXES = (CLIENT_AXIS, MODEL_AXIS)
 
 
 def client_stacked_specs(tree: Any) -> Any:
@@ -42,6 +48,27 @@ def client_stacked_specs(tree: Any) -> Any:
 def client_shardings(mesh, tree: Any) -> Any:
     """``NamedSharding`` pytree matching :func:`client_stacked_specs`."""
     return named(mesh, client_stacked_specs(tree))
+
+
+def fl_stacked_specs(tree: Any) -> Any:
+    """Train-layout specs on the 2-D FL mesh: the leading client axis of
+    every leaf shards over the combined ``("clients", "model")`` axis —
+    each of the ``kc·km`` devices holds an equal block of whole clients.
+    The slot count must be padded to a multiple of the mesh size first
+    (``ShardedFleetExecutor`` zero-weights the padding slots)."""
+    return jax.tree.map(lambda _: P(FL_AXES), tree)
+
+
+def fl_shardings(mesh, tree: Any) -> Any:
+    """``NamedSharding`` pytree matching :func:`fl_stacked_specs`."""
+    return named(mesh, fl_stacked_specs(tree))
+
+
+def fl_batch_specs(tree: Any) -> Any:
+    """Specs for a *step-stacked* batch pytree ``(steps, C_pad, ...)``: the
+    client axis (dim 1) shards over the combined FL axis, the step axis is
+    replicated — the layout the fused round plane streams sessions from."""
+    return jax.tree.map(lambda _: P(None, FL_AXES), tree)
 
 # (regex on leaf path, spec factory(shape, fsdp) -> PartitionSpec)
 # First match wins.  `d` = the FSDP axis (None when fsdp disabled).

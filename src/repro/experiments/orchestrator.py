@@ -134,6 +134,24 @@ def prepopulate_plan_cache(cells: Sequence[SweepCell], cache: PlanCache
     return {"planned": planned, "skipped": skipped, "batches": len(groups)}
 
 
+# Measured N-crossover of the sharded data plane (BENCH_fleet_scaling):
+# below this client count the mesh dispatch + padding overheads outweigh
+# device-level client parallelism and the single-device fleet plane is
+# faster, so engine="auto" downgrades sharded cells under the crossover.
+SHARDED_CROSSOVER_N = 64
+
+
+def _pick_executor(cell: SweepCell, engine: str) -> SweepCell:
+    cfg = cell.spec.fl
+    if (engine == "auto" and cfg.executor == "sharded"
+            and cfg.num_clients < SHARDED_CROSSOVER_N):
+        print(f"orchestrator,{cell.label},executor=fleet,"
+              f"reason=N={cfg.num_clients}<crossover={SHARDED_CROSSOVER_N}",
+              flush=True)
+        return cell.with_fl(executor="fleet")
+    return cell
+
+
 def _pick_engine(cell: SweepCell, engine: str) -> str:
     if cell.spec.fl.executor in ("fleet", "sharded"):
         # These executors already vmap/shard the *client* axis; replicate
@@ -169,6 +187,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
     """
     if not len(seeds):
         raise ValueError("run_cell needs at least one replicate seed")
+    cell = _pick_executor(cell, engine)
     chosen = _pick_engine(cell, engine)
     if checkpoint_root is not None:
         chosen = "loop"

@@ -91,6 +91,10 @@ class SweepDef:
     smoke_num_samples: int = 1000
     spec_overrides: dict = dataclasses.field(default_factory=dict)
     fl_overrides: dict = dataclasses.field(default_factory=dict)
+    # Per-axis-value strategy overrides, e.g. dropping the O(N³) Hungarian
+    # auction (feddif) at N ≥ 1024 in fig7_scaling.  Ignored when the axis
+    # itself is "strategy".
+    value_strategies: dict = dataclasses.field(default_factory=dict)
 
     def expand(self, smoke: bool = True, topology_seed: int = 0,
                executor: str = "host", planner: str = "host",
@@ -120,7 +124,8 @@ class SweepDef:
         cells: list[SweepCell] = []
         for value in values:
             strategies = ((value,) if self.axis == "strategy"
-                          else self.strategies)
+                          else self.value_strategies.get(value,
+                                                         self.strategies))
             for strategy in strategies:
                 fl_kwargs: dict = dict(
                     strategy=strategy, rounds=rounds, num_clients=clients,
@@ -150,6 +155,9 @@ class SweepDef:
         assert set(self.smoke_values) <= set(self.values), self.name
         for s in self.strategies:
             assert s in STRATEGIES, s
+        for strategies in self.value_strategies.values():
+            for s in strategies:
+                assert s in STRATEGIES, s
         if self.axis == "strategy":
             for v in self.values:
                 assert v in STRATEGIES, v
@@ -237,11 +245,15 @@ register(SweepDef(
     axis="num_clients",
     description="Large-N fleet scaling: client population N (M = N models) "
                 "× strategy under per-round churn/straggler dropout — the "
-                "regime the sharded executor targets (run with "
-                "--executor sharded).",
-    values=(20, 64, 256),
+                "regime the 2-D (clients × model) sharded executor targets "
+                "(run with --executor sharded).  At N ≥ 1024 the Hungarian "
+                "auction control plane is O(N³), so only the auction-free "
+                "strategies run there.",
+    values=(20, 64, 256, 1024, 4096),
     smoke_values=(20, 64),
     strategies=("fedavg", "d2d_random_walk", "feddif"),
+    value_strategies={1024: ("fedavg", "d2d_random_walk"),
+                      4096: ("fedavg", "d2d_random_walk")},
     rounds=6,
     smoke_rounds=2,
     num_samples=25600,

@@ -20,18 +20,35 @@ Two data planes consume the same schedule object:
   instead of O(Σ client batches) — which is what lets sweeps scale past
   paper-sized fleets.
 
-* :class:`ShardedFleetExecutor` — the large-N plane.  The stacked pytree's
-  leading client axis is *sharded* over a 1-D ``("clients",)`` mesh
-  (:func:`repro.launch.mesh.make_clients_mesh`,
-  :func:`repro.distributed.sharding.client_stacked_specs`) with
-  ``shard_map``: local sessions run client-parallel across devices with the
-  per-shard block further **microbatched** (``lax.map`` over chunks of
-  ``FLConfig.shard_microbatch`` clients) so N=256–1024 fleets fit in
-  memory; a :class:`~repro.core.schedule.PermuteOp` becomes a sharded
-  permutation collective (static routing tables + per-shift
-  ``lax.ppermute``); a :class:`~repro.core.schedule.MixOp` is a
-  ``psum_scatter``; Eq.-11 aggregation is a masked ``psum`` over the client
-  axis.  On a 1-device mesh it degenerates to the fleet program.
+* :class:`ShardedFleetExecutor` — the large-N plane, on the 2-D
+  ``("clients", "model")`` mesh of :func:`repro.launch.mesh.make_fl_mesh`.
+  The stacked pytree's leading client axis is *sharded* over the combined
+  mesh axis (:func:`repro.distributed.sharding.fl_stacked_specs`), padded
+  with zero-weighted slots when N does not divide the mesh, and runs in one
+  of two shard_map planes selected by ``FLConfig.shard_overlap``:
+
+  - the **op-by-op plane** (``shard_overlap="off"``, and the plane phase
+    profiling runs on): one compiled collective per schedule op — sessions
+    are ``shard_map``-ped with the per-shard block microbatched (``lax.map``
+    over chunks of ``FLConfig.shard_microbatch`` clients) so N=256–4096
+    fleets fit in memory, a :class:`~repro.core.schedule.PermuteOp` is a
+    ring-shift-decomposed permutation collective (static routing tables +
+    per-shift ``lax.ppermute``; with a model axis the flattened parameter
+    block is first feature-split over ``"model"`` via ``all_to_all`` so
+    each shift moves only F/km bytes per link), a
+    :class:`~repro.core.schedule.MixOp` is Wᵀ-partials + ``psum_scatter``,
+    and Eq.-11 aggregation is a masked ``psum`` over the combined axis.
+
+  - the **fused round plane** (``"on"``; ``"auto"`` resolves to it): the
+    whole round — broadcast, sessions, STC hops, permutes, mixes,
+    aggregation — is ONE jitted shard_map program per round signature.
+    Hop k's ring shifts are issued per *double-buffered chunk*: the send
+    buffers of chunk j+1 depend only on pre-hop state, so their collectives
+    can overlap chunk j's training compute (async collectives where the
+    backend supports them; on CPU the win is dispatch count — a handful of
+    device calls per round instead of O(hops × steps)).
+
+  On a 1-device mesh both planes degenerate to the fleet program.
 
 Ledger charging lives in none of them: :func:`~repro.core.schedule
 .charge_schedule` replays the schedule's wire events, so all executors
@@ -41,6 +58,7 @@ from __future__ import annotations
 
 import copy
 import functools
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -52,10 +70,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core import aggregation as agg
 from repro.core.schedule import MixOp, PermuteOp, RoundSchedule, TrainOp
 from repro.distributed.fedshard import diffuse_params, masked_stc_compress
-from repro.distributed.sharding import CLIENT_AXIS
+from repro.distributed.sharding import CLIENT_AXIS, FL_AXES, MODEL_AXIS
 from repro.fl.compression import stc_compress
 from repro.fl.schedulers import PROX_STRATEGIES
 from repro.kernels import ops as kernel_ops
+from repro.kernels.diffusion import stack_ravel, stack_unravel
 from repro.train import optimizer as opt_lib
 
 Params = Any
@@ -185,6 +204,27 @@ class FleetExecutor:
 
         self._one = one          # per-client step; ShardedFleetExecutor remaps
         self._step = jax.jit(jax.vmap(one))
+        self.profile = bool(getattr(cfg, "profile_phases", False))
+        self._phase: dict = {}
+
+    # ------------------------------------------------------- phase profiling
+
+    def _timed(self, phase: str, fn, *args):
+        """Run a round primitive; under ``cfg.profile_phases`` sync the
+        device and charge the wall-clock to ``phase`` (train /
+        hop_collective / mix — "plan" is added by the server)."""
+        if not self.profile:
+            return fn(*args)
+        t0 = time.time()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        self._phase[phase] = self._phase.get(phase, 0.0) + time.time() - t0
+        return out
+
+    def pop_phase_times(self) -> dict:
+        """Return and reset the per-round phase accumulator."""
+        out, self._phase = self._phase, {}
+        return out
 
     # ---------------------------------------------------------------- batches
 
@@ -276,30 +316,34 @@ class FleetExecutor:
         if sched.persistent and slots is not None:
             params = slots
         else:
-            params = self._broadcast(global_params, c_slots)
+            params = self._timed("hop_collective", self._broadcast,
+                                 global_params, c_slots)
         ref = global_params
         for op in sched.ops:
             if isinstance(op, TrainOp):
-                params = self._session(params, op.train_mask)
+                params = self._timed("train", self._session, params,
+                                     op.train_mask)
             elif isinstance(op, PermuteOp):
                 if op.compress:
-                    params = self._masked_stc(params, ref,
-                                              op.compress_src_mask(),
-                                              sched.stc_sparsity)
-                params = self._permute(params, op)
-                params = self._session(params, op.train_mask)
+                    params = self._timed("hop_collective", self._masked_stc,
+                                         params, ref, op.compress_src_mask(),
+                                         sched.stc_sparsity)
+                params = self._timed("hop_collective", self._permute,
+                                     params, op)
+                params = self._timed("train", self._session, params,
+                                     op.train_mask)
             elif isinstance(op, MixOp):
-                params = self._mix(params, op, c_slots)
+                params = self._timed("mix", self._mix, params, op, c_slots)
             else:
                 raise TypeError(f"unknown op {type(op).__name__}")
         wvec = sched.slot_weights()
         w = jnp.asarray((wvec / wvec.sum()).astype(np.float32))
         if sched.agg_mode == "stc_delta":
-            payload = self._masked_stc(params, ref, wvec > 0,
-                                       sched.stc_sparsity)
+            payload = self._timed("hop_collective", self._masked_stc,
+                                  params, ref, wvec > 0, sched.stc_sparsity)
         else:
             payload = params
-        new_global = self._aggregate(payload, w)
+        new_global = self._timed("mix", self._aggregate, payload, w)
         return new_global, (params if sched.persistent else None)
 
 
@@ -341,35 +385,210 @@ def _permutation_tables(src_of_dst: np.ndarray, num_shards: int
     return send, recv
 
 
+def _chunked_permutation_tables(src_of_dst: np.ndarray, num_shards: int,
+                                num_chunks: int
+                                ) -> tuple[np.ndarray, np.ndarray]:
+    """:func:`_permutation_tables` split by *destination chunk* — the
+    double-buffered stage tables of the fused round plane.
+
+    The local rows of every destination shard are cut into ``num_chunks``
+    contiguous chunks of ``mb = n_local / num_chunks`` rows; the rows
+    landing in chunk ``j`` travel in their own per-shift buffers, so chunk
+    ``j+1``'s collectives depend only on the *pre-hop* state and can be
+    issued while chunk ``j`` trains.  Returns
+
+    * ``send[s, j, shift, i]`` — local row the source shard ``s`` packs at
+      position ``i`` of the (chunk ``j``, ``shift``) buffer (0-padded), and
+    * ``recv[d, j, shift, i]`` — *chunk-relative* row where destination
+      ``d`` scatters position ``i`` (padded with ``mb``, a trash row).
+
+    A ``(shift, src, chunk)`` triple determines the destination shard, so
+    the packing order is shared exactly as in the unchunked tables; a
+    buffer never overflows ``mb`` because chunk ``j`` only has ``mb`` rows.
+    """
+    perm = np.asarray(src_of_dst, np.int64)
+    c = perm.shape[0]
+    k = num_shards
+    assert c % k == 0, (c, k)
+    nl = c // k
+    assert nl % num_chunks == 0, (nl, num_chunks)
+    mb = nl // num_chunks
+    send = np.zeros((k, num_chunks, k, mb), np.int32)
+    recv = np.full((k, num_chunks, k, mb), mb, np.int32)
+    fill = np.zeros((k, num_chunks, k), np.int32)
+    for dst in range(c):
+        src = int(perm[dst])
+        s, d = src // nl, dst // nl
+        r = dst % nl
+        j = r // mb
+        shift = (d - s) % k
+        i = int(fill[s, j, shift])
+        fill[s, j, shift] = i + 1
+        send[s, j, shift, i] = src % nl
+        recv[d, j, shift, i] = r - j * mb
+    return send, recv
+
+
 class ShardedFleetExecutor(FleetExecutor):
-    """Client-sharded execution over a ``("clients",)`` mesh axis.
+    """Client-sharded execution over the 2-D ``("clients", "model")`` mesh.
 
     Same math as :class:`FleetExecutor` (it reuses the per-client step and
-    the host-side batch streams verbatim); the difference is placement: the
-    leading client axis of every pytree leaf lives sharded across the mesh,
-    sessions are ``shard_map``-ped so each device trains only its block of
-    clients — microbatched in chunks of ``FLConfig.shard_microbatch`` so
-    device memory is O(microbatch), not O(N) — and cross-client ops are
-    explicit collectives (``ppermute`` hops, ``psum_scatter`` mixes, masked
-    ``psum`` aggregation).
+    the host-side batch streams verbatim); the difference is placement and
+    program shape:
+
+    * **Layout.**  The leading client axis of every leaf is sharded over the
+      *combined* mesh axes; N is padded to ``c_pad`` (next multiple of the
+      mesh size) with zero-weighted padding slots — identity rows in mix
+      matrices, identity extensions of hop permutations, ``False`` training
+      masks — so padding never leaks into real slots and no divisibility is
+      required of N.  During a hop with ``km > 1`` the flattened parameter
+      block is feature-split over ``"model"`` (``all_to_all``), each
+      ``"clients"``-ring ``ppermute`` then moves F/km bytes per link, and
+      the inverse ``all_to_all`` restores the train layout.
+
+    * **Planes.**  ``FLConfig.shard_overlap`` picks between the inherited
+      op-by-op round loop (one compiled collective per schedule op; the
+      plane phase profiling must run on) and the fused round plane: the
+      whole round is ONE jitted shard_map program per round *signature*
+      (op kinds + step counts + compress/agg flags + hop transport), with
+      each hop's ring shifts issued per double-buffered destination chunk
+      so chunk j+1's collectives — which depend only on pre-hop state —
+      overlap chunk j's training compute.
+
+    * **Hop transport.**  ``FLConfig.shard_hop_transport`` picks the fused
+      plane's hop collective: ``"gather"`` (one tiled ``all_gather`` over
+      the combined axes + local row-take — a single rendezvous per hop)
+      or ``"ring"`` (kc ``ppermute`` shifts, O(block) memory, double
+      buffered).  ``"auto"`` takes gather while the gathered ``(c_pad, F)``
+      stack fits ``GATHER_BUDGET_BYTES`` per device and rings past it.
+
+    * **Signature stability.**  Every distinct round signature is a fresh
+      trace + XLA compile of the whole-round program — at N ≥ 1024 that
+      retrace dominated the round wall-clock, because both the diffusion
+      wave count and the ragged epoch lengths vary per round.  The fused
+      plane therefore normalizes the signature: all session step counts
+      pad to a running maximum (padded steps carry all-``False`` active
+      masks and are skipped at runtime by a ``lax.cond`` that sits outside
+      the vmap), and each run of hop segments pads to a multiple of
+      ``FUSED_WAVE_BUCKET`` with identity no-op waves (identity routing,
+      nothing trains, zero wire charge).  Padding is executor-internal —
+      exactly like the ``c_pad`` slot padding, it never touches real
+      slots, so ledger and parameter parity are preserved bit-identically.
     """
 
     def __init__(self, loss_fn: Callable,
                  client_batches: Sequence[Callable], cfg,
                  clip: float | None = 10.0, mesh=None):
         super().__init__(loss_fn, client_batches, cfg, clip)
-        from repro.launch.mesh import make_clients_mesh
+        from repro.launch.mesh import make_fl_mesh
         c = cfg.num_clients
-        self.mesh = mesh if mesh is not None else make_clients_mesh(c)
-        self.k = int(self.mesh.shape[CLIENT_AXIS])
-        assert c % self.k == 0, (c, self.k)
-        self.nl = c // self.k
+        if mesh is None:
+            mesh = make_fl_mesh(c, model=int(getattr(cfg,
+                                                     "mesh_model_axis", 1)))
+        self.mesh = mesh
+        shape = dict(mesh.shape)
+        self.kc = int(shape[CLIENT_AXIS])
+        self.km = int(shape.get(MODEL_AXIS, 1))
+        # A caller-supplied 1-D ("clients",) mesh still works: the model
+        # axis degenerates and every spec collapses to P(("clients",)).
+        self._axes = FL_AXES if MODEL_AXIS in shape else (CLIENT_AXIS,)
+        self.k = self.kc * self.km
+        self.c = c
+        self.c_pad = -(-c // self.k) * self.k
+        self.nl = self.c_pad // self.k        # train-layout rows per device
+        self.nl_hop = self.c_pad // self.kc   # hop-layout rows per ring slot
         mb_cap = max(1, int(getattr(cfg, "shard_microbatch", 32)))
         self.mb = max(b for b in range(1, min(mb_cap, self.nl) + 1)
                       if self.nl % b == 0)
         self.nchunks = self.nl // self.mb
+        # Fused-plane double buffering: two destination chunks per hop when
+        # the local block splits evenly.  Chunk j+1's send gathers read only
+        # pre-hop state, so its collectives can issue while chunk j trains.
+        self.fused_chunks = 2 if (self.km == 1 and self.nl % 2 == 0) else 1
+        self.fused_mb = self.nl // self.fused_chunks
+        mode = str(getattr(cfg, "shard_overlap", "auto"))
+        assert mode in ("auto", "on", "off"), mode
+        # Phase profiling needs per-op dispatch boundaries, and below
+        # FUSED_MIN_CLIENTS the fused program's compile cost and round-
+        # signature sensitivity outweigh the dispatch it saves — "auto"
+        # therefore takes the fused plane only for large unprofiled fleets.
+        self.overlap = mode == "on" or (mode == "auto" and not self.profile
+                                        and c >= self.FUSED_MIN_CLIENTS)
+        transport = str(getattr(cfg, "shard_hop_transport", "auto"))
+        assert transport in ("auto", "ring", "gather"), transport
+        self._transport_req = transport
+        self._transport: str | None = None     # resolved on first fused round
         self._stc_cache: dict = {}
+        self._fused_cache: dict = {}
+        # Fused-plane signature normalization (see class docstring): the
+        # running per-segment step maximum, and a zero batch template for
+        # the cond-skipped padding steps (set on the first drawn step).
+        self._nb_pad = 0
+        self._batch_template = None
         self._build()
+
+    # Largest gathered flat client stack (c_pad × F × 4 bytes) the "auto"
+    # hop transport will materialize per device; beyond it hops fall back to
+    # the O(block)-memory ring shifts.
+    GATHER_BUDGET_BYTES = 1 << 30
+
+    # Hop runs pad to a multiple of this many waves with identity no-op
+    # segments, bounding the signature space (and hence trace + compile
+    # count) while a no-op wave costs one skipped hop at runtime.
+    FUSED_WAVE_BUCKET = 4
+
+    # Smallest fleet for which ``shard_overlap="auto"`` takes the fused
+    # round plane: below it per-op dispatch is cheap relative to the round
+    # and the whole-round program only adds compile latency.
+    FUSED_MIN_CLIENTS = 256
+
+    def _hop_transport(self, params) -> str:
+        """Resolve the fused-plane hop collective for this model size.
+
+        ``"gather"`` moves each hop with ONE tiled ``all_gather`` over the
+        combined mesh axes plus a local row-take — a single collective
+        rendezvous per hop, the fast path whenever the gathered
+        ``(c_pad, F)`` stack fits :data:`GATHER_BUDGET_BYTES` per device.
+        ``"ring"`` is the per-shift ``ppermute`` decomposition (double
+        buffered when ``km == 1``): kc rendezvous per hop but O(block)
+        memory — the large-model path.
+        """
+        if self._transport is None:
+            if self._transport_req != "auto":
+                self._transport = self._transport_req
+            else:
+                # params: the GLOBAL (unstacked) pytree — F is its flat size.
+                f = sum(int(np.prod(x.shape))
+                        for x in jax.tree.leaves(params))
+                gathered = 4 * self.c_pad * f
+                self._transport = ("gather"
+                                   if gathered <= self.GATHER_BUDGET_BYTES
+                                   else "ring")
+        return self._transport
+
+    # -------------------------------------------------------- slot padding
+
+    def _pad_mask(self, mask) -> np.ndarray:
+        m = np.zeros(self.c_pad, dtype=bool)
+        m[:self.c] = np.asarray(mask, dtype=bool)
+        return m
+
+    def _pad_perm(self, src_of_dst) -> np.ndarray:
+        p = np.arange(self.c_pad, dtype=np.int64)
+        p[:self.c] = np.asarray(src_of_dst, dtype=np.int64)
+        return p
+
+    def _pad_matrix(self, w: np.ndarray) -> np.ndarray:
+        # Identity on the padding block: padded slots keep their content
+        # and contribute weight 0 to every real slot's mixture.
+        out = np.eye(self.c_pad, dtype=np.float32)
+        out[:self.c, :self.c] = w
+        return out
+
+    def _pad_weights(self, w) -> np.ndarray:
+        out = np.zeros(self.c_pad, dtype=np.float32)
+        out[:self.c] = np.asarray(w, dtype=np.float32)
+        return out
 
     # ------------------------------------------------------- compiled planes
 
@@ -378,8 +597,12 @@ class ShardedFleetExecutor(FleetExecutor):
                                  out_specs=out_specs, check_rep=False))
 
     def _build(self) -> None:
-        pc = P(CLIENT_AXIS)
-        k, nl, nchunks, mb = self.k, self.nl, self.nchunks, self.mb
+        axes = self._axes
+        pc = P(axes)
+        kc, km = self.kc, self.km
+        nl, nl_hop = self.nl, self.nl_hop
+        nchunks, mb = self.nchunks, self.mb
+        D, mbh = self.fused_chunks, self.fused_mb
         vstep = jax.vmap(self._one)
 
         def chunked_session_step(p, mom, batch, active, anchor):
@@ -399,104 +622,422 @@ class ShardedFleetExecutor(FleetExecutor):
                                  in_specs=(pc, pc, pc, pc, pc),
                                  out_specs=(pc, pc, pc))
 
-        def permute_leaf(x, send, recv):
-            out = jnp.zeros((nl + 1,) + x.shape[1:], x.dtype)
-            for shift in range(k):
+        def session_local(params, steps):
+            # Fused-plane session body: same math as FleetExecutor._session
+            # but running *inside* shard_map on the local block.  Steps
+            # whose active mask is empty on this device — signature
+            # padding, ragged epochs — are skipped by a real branch: the
+            # lax.cond sits outside the vmap, so a padded step costs one
+            # predicate, not a training step.
+            if not steps:
+                return params
+            mom = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+            anchor = params
+            for batch, active in steps:
+                def run(carry, batch=batch, active=active):
+                    p, m = carry
+                    p2, m2, _ = chunked_session_step(p, m, batch, active,
+                                                     anchor)
+                    return p2, m2
+                params, mom = jax.lax.cond(jnp.any(active), run,
+                                           lambda carry: carry,
+                                           (params, mom))
+            return params
+
+        self._local_session = session_local
+
+        def shift_rows(x, send, recv):
+            # x: (nl_hop, F) hop-layout rows; send/recv: (kc, nl_hop) local
+            # routing tables.  kc ring shifts, trash row nl_hop for padding.
+            out = jnp.zeros((nl_hop + 1,) + x.shape[1:], x.dtype)
+            for shift in range(kc):
                 buf = jnp.take(x, send[shift], axis=0)
                 if shift:
                     buf = jax.lax.ppermute(
                         buf, CLIENT_AXIS,
-                        [(s, (s + shift) % k) for s in range(k)])
+                        [(s, (s + shift) % kc) for s in range(kc)])
                 out = out.at[recv[shift]].set(buf)
-            return out[:nl]
+            return out[:nl_hop]
 
-        def permute_tree(params, send, recv):
-            send, recv = send[0], recv[0]      # (1, k, nl) local -> (k, nl)
+        def permute_local(params, send_all, recv_all):
+            # Routing tables travel replicated ((kc, kc, nl_hop)); each ring
+            # slot selects its row by mesh position.
+            ic = jax.lax.axis_index(CLIENT_AXIS)
+            send, recv = send_all[ic], recv_all[ic]
+            if km == 1:
+                return jax.tree.map(
+                    lambda x: shift_rows(x, send, recv), params)
+            # Hop layout: feature-split every leaf over "model" so one ring
+            # shift moves F/km bytes per link.  After the all_to_all the
+            # device holds the *contiguous* client rows of its ring slot
+            # (row blocks concatenate in model-axis order, and the combined
+            # linear device order is ic·km + im), which is exactly the
+            # contiguity _permutation_tables assumes.
+            flat, spec = stack_ravel(params)
+            f = flat.shape[1]
+            fpad = (-f) % km
+            if fpad:
+                flat = jnp.pad(flat, ((0, 0), (0, fpad)))
+            x = jax.lax.all_to_all(flat, MODEL_AXIS, split_axis=1,
+                                   concat_axis=0, tiled=True)
+            y = shift_rows(x, send, recv)
+            y = jax.lax.all_to_all(y, MODEL_AXIS, split_axis=0,
+                                   concat_axis=1, tiled=True)
+            return stack_unravel(y[:, :f], spec)
+
+        self._local_permute = permute_local
+        self._sh_permute = self._shmap(permute_local,
+                                       in_specs=(pc, P(), P()), out_specs=pc)
+
+        def gather_permute_local(params, perm):
+            # One-collective hop: tiled all_gather over the combined axes
+            # reassembles the (c_pad, F) flat stack in global slot order
+            # (device linear index ic·km + im matches the concatenation
+            # order), then each device takes its own destination rows.  One
+            # rendezvous per hop vs the ring's kc — the fast transport while
+            # the gathered stack fits GATHER_BUDGET_BYTES.
+            flat, spec = stack_ravel(params)
+            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)
+            d = jax.lax.axis_index(CLIENT_AXIS)
+            if km > 1:
+                d = d * km + jax.lax.axis_index(MODEL_AXIS)
+            rows = jax.lax.dynamic_slice_in_dim(perm, d * nl, nl)
+            return stack_unravel(jnp.take(full, rows, axis=0), spec)
+
+        self._local_permute_gather = gather_permute_local
+
+        def chunked_permute_session(params, send_all, recv_all, steps):
+            # Double-buffered fused hop (km == 1): rows are routed per
+            # *destination chunk*; chunk j's scatter+train consumes only its
+            # own buffers while chunk j+1's gathers read the pre-hop flat
+            # block, so the backend can overlap j+1's collectives with j's
+            # compute.  Concatenating the trained chunks restores slot order.
+            ic = jax.lax.axis_index(CLIENT_AXIS)
+            send, recv = send_all[ic], recv_all[ic]     # (D, kc, mbh)
+            flat, spec = stack_ravel(params)
+            chunks = []
+            for j in range(D):
+                out = jnp.zeros((mbh + 1, flat.shape[1]), flat.dtype)
+                for shift in range(kc):
+                    buf = jnp.take(flat, send[j, shift], axis=0)
+                    if shift:
+                        buf = jax.lax.ppermute(
+                            buf, CLIENT_AXIS,
+                            [(s, (s + shift) % kc) for s in range(kc)])
+                    out = out.at[recv[j, shift]].set(buf)
+                chunk = stack_unravel(out[:mbh], spec)
+                if steps:
+                    mom = jax.tree.map(
+                        lambda p: jnp.zeros_like(p, jnp.float32), chunk)
+                    anchor = chunk
+                    for batch, active in steps:
+                        bch = jax.tree.map(
+                            lambda x: x[j * mbh:(j + 1) * mbh], batch)
+                        act = active[j * mbh:(j + 1) * mbh]
+
+                        def run(carry, bch=bch, act=act, anchor=anchor):
+                            p, m = carry
+                            p2, m2, _ = vstep(p, m, bch, act, anchor)
+                            return p2, m2
+                        chunk, mom = jax.lax.cond(
+                            jnp.any(act), run, lambda carry: carry,
+                            (chunk, mom))
+                chunks.append(chunk)
             return jax.tree.map(
-                lambda x: permute_leaf(x, send, recv), params)
+                lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
 
-        self._sh_permute = self._shmap(permute_tree,
-                                       in_specs=(pc, pc, pc), out_specs=pc)
+        self._local_permute_session = chunked_permute_session
 
-        def mix_tree(params, wt_local):
-            # wt_local: this shard's (nl, C) block of Wᵀ — the kernel data
-            # plane computes the partial products over local source slots
-            # ((C, ...) fp32 per leaf: partials stay fp32 across the
-            # collective), then psum_scatter reduces them back to owners.
+        def mix_local(params, wt_local):
+            # wt_local: this device's (nl, C_pad) block of Wᵀ — the kernel
+            # data plane computes the partial products over local source
+            # slots ((C_pad, ...) fp32 per leaf: partials stay fp32 across
+            # the collective), then psum_scatter reduces them back to
+            # owners.  Scattering over "clients" then "model" lands row
+            # block (ic·km + im)·nl — the combined-order train layout.
             part = kernel_ops.mix_aggregate_tree(params, wt_local.T,
                                                  keep_float32=True)
 
             def scatter(x, orig):
                 out = jax.lax.psum_scatter(x, CLIENT_AXIS,
                                            scatter_dimension=0, tiled=True)
+                if km > 1:
+                    out = jax.lax.psum_scatter(out, MODEL_AXIS,
+                                               scatter_dimension=0,
+                                               tiled=True)
                 return out.astype(orig.dtype)
             return jax.tree.map(scatter, part, params)
 
-        self._sh_mix = self._shmap(mix_tree, in_specs=(pc, pc), out_specs=pc)
+        self._local_mix = mix_local
+        self._sh_mix = self._shmap(mix_local, in_specs=(pc, pc),
+                                   out_specs=pc)
 
-        def agg_tree(payload, w_local):
-            # Eq. (11) as a masked psum: dropped/churned slots carry zero
-            # weight, so their shard contributes nothing to the reduction.
+        def agg_local(payload, w_local):
+            # Eq. (11) as a masked psum over the combined axes: dropped,
+            # churned and padding slots carry zero weight, so their rows
+            # contribute nothing to the reduction.
             part = kernel_ops.mix_aggregate_tree(
                 payload, w_local.reshape(1, -1), collapse=True,
                 keep_float32=True)
 
             def reduce(x, orig):
-                return jax.lax.psum(x, CLIENT_AXIS).astype(orig.dtype)
+                return jax.lax.psum(x, axes).astype(orig.dtype)
             return jax.tree.map(reduce, part, payload)
 
-        self._sh_agg = self._shmap(agg_tree, in_specs=(pc, pc), out_specs=P())
+        self._local_agg = agg_local
+        self._sh_agg = self._shmap(agg_local, in_specs=(pc, pc),
+                                   out_specs=P())
 
-        def bcast_tree(g):
+        def bcast_local(g):
             return jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (nl,) + x.shape), g)
 
-        self._sh_bcast = self._shmap(bcast_tree, in_specs=P(), out_specs=pc)
+        self._local_bcast = bcast_local
+        self._sh_bcast = self._shmap(bcast_local, in_specs=P(), out_specs=pc)
 
     def _sh_stc(self, sparsity: float):
         fn = self._stc_cache.get(sparsity)
         if fn is None:
+            pc = P(self._axes)
+
             def stc_tree(params, ref, mask):
                 return masked_stc_compress(params, ref, mask, sparsity)
-            fn = self._shmap(stc_tree, in_specs=(P(CLIENT_AXIS), P(),
-                                                 P(CLIENT_AXIS)),
-                             out_specs=P(CLIENT_AXIS))
+            fn = self._shmap(stc_tree, in_specs=(pc, P(), pc), out_specs=pc)
             self._stc_cache[sparsity] = fn
         return fn
 
     # ------------------------- primitive overrides (round loop inherited)
 
+    def capture_slots(self, slots: Params | None):
+        # Padding slots are an executor-internal placement detail — strip
+        # them so checkpoints are executor-portable.
+        if slots is None:
+            return None
+        host = jax.device_get(slots)
+        if self.c_pad == self.c:
+            return host
+        return jax.tree.map(lambda x: x[:self.c], host)
+
     def adopt_slots(self, saved):
-        # Restored slot state must land client-sharded, not replicated —
-        # the shard_map planes expect the leading axis on the mesh.
-        sh = jax.sharding.NamedSharding(self.mesh, P(CLIENT_AXIS))
-        return jax.tree.map(
-            lambda x: jax.device_put(jnp.asarray(x), sh), saved)
+        # Restored slot state must land client-sharded (zero-filled padding
+        # rows) — the shard_map planes expect the leading axis on the mesh.
+        sh = jax.sharding.NamedSharding(self.mesh, P(self._axes))
+
+        def place(x):
+            x = np.asarray(x)
+            if self.c_pad != self.c:
+                pad = np.zeros((self.c_pad - self.c,) + x.shape[1:],
+                               x.dtype)
+                x = np.concatenate([x, pad], axis=0)
+            return jax.device_put(jnp.asarray(x), sh)
+        return jax.tree.map(place, saved)
 
     def _broadcast(self, global_params: Params, num_slots: int) -> Params:
         return self._sh_bcast(global_params)
 
+    def _session(self, params: Params, mask: np.ndarray) -> Params:
+        return super()._session(params, self._pad_mask(mask))
+
     def _permute(self, params: Params, op: PermuteOp) -> Params:
-        send, recv = _permutation_tables(op.src_of_dst, self.k)
+        send, recv = _permutation_tables(self._pad_perm(op.src_of_dst),
+                                         self.kc)
         return self._sh_permute(params, jnp.asarray(send),
                                 jnp.asarray(recv))
 
     def _mix(self, params: Params, op: MixOp, num_slots: int) -> Params:
-        wt = np.ascontiguousarray(op.matrix(num_slots).T)
+        wt = np.ascontiguousarray(
+            self._pad_matrix(op.matrix(num_slots)).T)
         return self._sh_mix(params, jnp.asarray(wt))
 
     def _masked_stc(self, params: Params, ref: Params, mask: np.ndarray,
                     sparsity: float) -> Params:
-        return self._sh_stc(sparsity)(params, ref, jnp.asarray(mask))
+        return self._sh_stc(sparsity)(params, ref,
+                                      jnp.asarray(self._pad_mask(mask)))
 
     def _aggregate(self, payload: Params, w: jax.Array) -> Params:
-        return self._sh_agg(payload, w)
+        return self._sh_agg(payload,
+                            jnp.asarray(self._pad_weights(np.asarray(w))))
+
+    # ------------------------------------------------------ fused round plane
+
+    def _build_fused(self, segs: tuple, persistent_in: bool,
+                     stc_delta: bool, sparsity: float, transport: str):
+        pc = P(self._axes)
+        km, D = self.km, self.fused_chunks
+        session = self._local_session
+        gather = transport == "gather"
+
+        in_specs: list = [P()]                   # global params (replicated)
+        if persistent_in:
+            in_specs.append(pc)                  # carried slot state
+        for seg in segs:
+            if seg[0] == "train":
+                in_specs += [pc, pc] * seg[1]    # (batch, active) per step
+            elif seg[0] == "perm":
+                if seg[2]:
+                    in_specs.append(pc)          # compress-source mask
+                # gather: padded permutation; ring: send/recv routing
+                # tables — replicated either way
+                in_specs += [P()] if gather else [P(), P()]
+                in_specs += [pc, pc] * seg[1]
+            else:                                # mix
+                in_specs.append(pc)              # Wᵀ row block
+        if stc_delta:
+            in_specs.append(pc)                  # agg compress mask
+        in_specs.append(pc)                      # agg weights
+
+        def fused(g, *rest):
+            it = iter(rest)
+            params = next(it) if persistent_in else self._local_bcast(g)
+            ref = g
+            for seg in segs:
+                if seg[0] == "train":
+                    steps = [(next(it), next(it)) for _ in range(seg[1])]
+                    params = session(params, steps)
+                elif seg[0] == "perm":
+                    cmask = next(it) if seg[2] else None
+                    route = (next(it),) if gather else (next(it), next(it))
+                    steps = [(next(it), next(it)) for _ in range(seg[1])]
+                    if cmask is not None:
+                        params = masked_stc_compress(params, ref, cmask,
+                                                     sparsity)
+                    if gather:
+                        params = self._local_permute_gather(params, *route)
+                        params = session(params, steps)
+                    elif km == 1 and D > 1:
+                        params = self._local_permute_session(
+                            params, *route, steps)
+                    else:
+                        params = self._local_permute(params, *route)
+                        params = session(params, steps)
+                else:
+                    params = self._local_mix(params, next(it))
+            wmask = next(it) if stc_delta else None
+            w_local = next(it)
+            payload = (masked_stc_compress(params, ref, wmask, sparsity)
+                       if stc_delta else params)
+            return self._local_agg(payload, w_local), params
+
+        return self._shmap(fused, in_specs=tuple(in_specs),
+                           out_specs=(P(), pc))
+
+    def _run_round_fused(self, sched: RoundSchedule, global_params: Params,
+                         slots: Params | None
+                         ) -> tuple[Params, Params | None]:
+        persistent_in = bool(sched.persistent and slots is not None)
+        transport = self._hop_transport(global_params)
+        # Pass 1 — draw every session in schedule order (batch-stream
+        # parity with the op-by-op loop) and settle the round's uniform
+        # step count before any segment is emitted: padding to a running
+        # max mid-walk would leave earlier segments shorter and the
+        # signature ragged again.
+        drawn: list = []
+        for op in sched.ops:
+            if isinstance(op, (TrainOp, PermuteOp)):
+                steps, actives = self._draw_session(
+                    self._pad_mask(op.train_mask))
+                if steps and self._batch_template is None:
+                    self._batch_template = jax.tree.map(jnp.zeros_like,
+                                                        steps[0])
+                self._nb_pad = max(self._nb_pad, len(steps))
+                drawn.append((op, list(zip(steps, actives))))
+            elif isinstance(op, MixOp):
+                drawn.append((op, None))
+            else:
+                raise TypeError(f"unknown op {type(op).__name__}")
+
+        nb = self._nb_pad
+        dead = jnp.zeros(self.c_pad, dtype=bool)
+
+        def pad_steps(pairs):
+            pairs += [(self._batch_template, dead)] * (nb - len(pairs))
+            return pairs
+
+        def route_args(perm):
+            if transport == "gather":
+                return [jnp.asarray(perm)]
+            if self.km == 1 and self.fused_chunks > 1:
+                send, recv = _chunked_permutation_tables(
+                    perm, self.kc, self.fused_chunks)
+            else:
+                send, recv = _permutation_tables(perm, self.kc)
+            return [jnp.asarray(send), jnp.asarray(recv)]
+
+        # Pass 2 — emit segments, bucketing every hop run (see docstring).
+        segs: list = []
+        args: list = []
+        pend = 0                 # open hop-run length
+        pend_compress = False
+
+        def close_run():
+            nonlocal pend
+            npad = (-pend) % self.FUSED_WAVE_BUCKET if pend else 0
+            for _ in range(npad):
+                if pend_compress:
+                    args.append(dead)
+                args.extend(route_args(np.arange(self.c_pad,
+                                                 dtype=np.int64)))
+                for _ in range(nb):
+                    args.extend((self._batch_template, dead))
+                segs.append(("perm", nb, pend_compress))
+            pend = 0
+
+        for op, pairs in drawn:
+            if isinstance(op, TrainOp):
+                close_run()
+                pairs = pad_steps(pairs)
+                segs.append(("train", len(pairs)))
+                for b, a in pairs:
+                    args.extend((b, a))
+            elif isinstance(op, PermuteOp):
+                compress = bool(op.compress)
+                if pend and compress != pend_compress:
+                    close_run()
+                pend_compress = compress
+                pend += 1
+                if compress:
+                    args.append(jnp.asarray(
+                        self._pad_mask(op.compress_src_mask())))
+                args.extend(route_args(self._pad_perm(op.src_of_dst)))
+                pairs = pad_steps(pairs)
+                segs.append(("perm", len(pairs), compress))
+                for b, a in pairs:
+                    args.extend((b, a))
+            else:
+                close_run()
+                segs.append(("mix",))
+                wt = np.ascontiguousarray(
+                    self._pad_matrix(op.matrix(sched.num_slots)).T)
+                args.append(jnp.asarray(wt))
+        close_run()
+        wvec = sched.slot_weights()
+        stc_delta = sched.agg_mode == "stc_delta"
+        if stc_delta:
+            args.append(jnp.asarray(self._pad_mask(wvec > 0)))
+        args.append(jnp.asarray(self._pad_weights(
+            (wvec / wvec.sum()).astype(np.float32))))
+
+        key = (tuple(segs), persistent_in, stc_delta,
+               float(sched.stc_sparsity), transport)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            fn = self._build_fused(tuple(segs), persistent_in, stc_delta,
+                                   float(sched.stc_sparsity), transport)
+            self._fused_cache[key] = fn
+        if persistent_in:
+            new_global, params = fn(global_params, slots, *args)
+        else:
+            new_global, params = fn(global_params, *args)
+        return new_global, (params if sched.persistent else None)
 
     def run_round(self, sched: RoundSchedule, global_params: Params,
                   slots: Params | None) -> tuple[Params, Params | None]:
         # The mesh/tables were built for cfg.num_clients slots.
         assert sched.num_slots == self.cfg.num_clients, \
             (sched.num_slots, self.cfg.num_clients)
+        if self.overlap and not self.profile:
+            return self._run_round_fused(sched, global_params, slots)
         return super().run_round(sched, global_params, slots)
 
 

@@ -101,6 +101,25 @@ class FLConfig:
                                      # | "sharded" (client-sharded mesh)
     shard_microbatch: int = 32       # clients per device microbatch when
                                      # executor="sharded" (caps memory)
+    mesh_model_axis: int = 1         # requested "model" axis size of the 2-D
+                                     # ("clients","model") FL mesh — hops
+                                     # feature-shard over it (make_fl_mesh)
+    shard_overlap: str = "auto"      # "auto"|"on"|"off": fused round plane
+                                     # with double-buffered hop/train stages
+                                     # ("on") vs the op-by-op legacy plane
+                                     # ("off"); "auto" = fused at large N
+                                     # (executors.FUSED_MIN_CLIENTS) where
+                                     # per-op dispatch dominates, op-by-op
+                                     # below it and while profiling phases
+    shard_hop_transport: str = "auto"  # fused-plane hop collective:
+                                     # "gather" (one all_gather per hop, the
+                                     # fast path while the gathered stack
+                                     # fits memory) | "ring" (per-shift
+                                     # ppermute, O(block) memory) | "auto"
+                                     # = gather under the byte budget
+    profile_phases: bool = False     # per-round train/hop/mix wall-clock
+                                     # breakdown (forces the op-by-op plane —
+                                     # a fused round cannot be sub-timed)
     churn_rate: float = 0.0          # per-round P(client drops out) — see
                                      # schedulers.apply_round_churn
     planner: str = "host"            # control plane: "host" numpy oracle |
@@ -125,6 +144,12 @@ class FLResult:
     # benchmarks/run.py fleet_scaling gates on.  Empty for engines that
     # bypass run_federated (seed_vmap replication).
     round_wall_s: list = dataclasses.field(default_factory=list)
+    # Per-round phase breakdown dicts (train / hop_collective / mix / plan,
+    # seconds) when ``cfg.profile_phases`` — empty otherwise.  "plan" is the
+    # control plane (schedule build + churn + ledger charge); the rest are
+    # data-plane primitives timed inside the executor with a device sync
+    # after each (so the split is attributable, at the cost of overlap).
+    phase_s: list = dataclasses.field(default_factory=list)
 
     def rounds_to_accuracy(self, target: float) -> int | None:
         for i, a in enumerate(self.accuracy):
@@ -204,6 +229,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
 
     acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
     round_wall: list[float] = []
+    phase_hist: list[dict] = []
     slots = None            # persistent per-slot state (gossip / tthf)
     start_t = 0
 
@@ -230,6 +256,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng),
                               GAMMA_FLOOR)
 
+        t_plan = time.time()
         ctx = RoundContext(cfg=cfg, t=t, dsi=dsi, data_sizes=data_sizes,
                            pos=pos, rng=ctrl_rng, up_gamma=up_gamma,
                            topology=topology, channel=channel,
@@ -239,11 +266,17 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         schedule = SCHEDULERS[cfg.strategy](ctx)
         schedule = apply_round_churn(ctx, schedule)
         charge_schedule(ledger, schedule)
+        plan_s = time.time() - t_plan
         t_exec = time.time()
         global_params, slots = executor.run_round(schedule, global_params,
                                                   slots)
         jax.block_until_ready(global_params)
         round_wall.append(time.time() - t_exec)
+        if cfg.profile_phases:
+            phases = dict(getattr(executor, "pop_phase_times",
+                                  lambda: {})())
+            phases["plan"] = plan_s
+            phase_hist.append(phases)
         dif_hist.append(schedule.diffusion_rounds)
         iid_hist.append(schedule.mean_iid)
 
@@ -261,4 +294,4 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
                     diffusion_rounds=dif_hist, iid_distance=iid_hist,
                     config=cfg, final_params=global_params,
-                    round_wall_s=round_wall)
+                    round_wall_s=round_wall, phase_s=phase_hist)

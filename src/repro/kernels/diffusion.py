@@ -56,6 +56,7 @@ __all__ = ["mix_aggregate_pallas", "stc_rows_pallas", "dol_bid_scores_pallas",
            "dol_bid_scores_xla_fused", "stack_ravel", "stack_unravel"]
 
 BLOCK_F = 8192      # feature-axis tile (fp32 (C, BF) block in VMEM)
+BLOCK_C = 1024      # client-axis tile (streaming accumulate over C)
 VMEM_BUDGET = 4 << 20   # per-operand VMEM budget used to shrink BLOCK_F
 
 
@@ -116,37 +117,55 @@ def _feature_block(rows: int, block: int, n: int) -> int:
 # ------------------------------------------------------------ mix/aggregate
 
 def _mix_kernel(w_ref, x_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)             # (G, C)
-    x = x_ref[...].astype(jnp.float32)             # (C, BF)
-    o_ref[...] = jax.lax.dot(w, x,
-                             preferred_element_type=jnp.float32)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(jnp.float32)             # (G, BC)
+    x = x_ref[...].astype(jnp.float32)             # (BC, BF)
+    o_ref[...] += jax.lax.dot(w, x,
+                              preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_f", "block_c",
+                                             "interpret"))
 def mix_aggregate_pallas(x: jax.Array, w: jax.Array, *,
-                         block_f: int = BLOCK_F,
+                         block_f: int = BLOCK_F, block_c: int = BLOCK_C,
                          interpret: bool = True) -> jax.Array:
-    """``w @ x`` over feature tiles: x (C, F) fp32, w (G, C) → (G, F).
+    """``w @ x`` over (feature, client) tiles: x (C, F), w (G, C) → (G, F).
 
-    One grid step streams one (C, BF) block of the stacked fleet through
-    VMEM and emits the (G, BF) mixed/aggregated block — Eq. (10)/(11) in a
-    single HBM pass regardless of how many pytree leaves were flattened
-    into F.
+    Grid cell (i, k) streams the (BC, BF) client tile through VMEM and
+    accumulates its Wᵀ-partial into the *revolving* (G, BF) output block:
+    the output index map ignores k, so the block stays resident in VMEM
+    across the inner client loop while Pallas double-buffers the next x
+    tile's HBM fetch behind the current MXU pass — Eq. (10)/(11) streams
+    over fleets far larger than VMEM instead of barriering on one (C, BF)
+    slab.  Fleets with C ≤ block_c keep the original single-tile schedule
+    (and its exact summation order).
     """
     c, f = x.shape
     g = w.shape[0]
     assert w.shape == (g, c), (w.shape, x.shape)
-    bf = _feature_block(max(c, g), block_f, f)
+    bc = min(block_c, max(8, -(-c // 8) * 8))
+    pad_c = (-c) % bc
+    if pad_c:
+        # Zero client rows / weight columns contribute nothing to any sum.
+        x = jnp.pad(x, ((0, pad_c), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad_c)))
+    nc = x.shape[0] // bc
+    bf = _feature_block(max(bc, g), block_f, f)
     pad = (-f) % bf
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
-    grid = x.shape[1] // bf
+    grid = (x.shape[1] // bf, nc)
     out = pl.pallas_call(
         _mix_kernel,
-        grid=(grid,),
-        in_specs=[pl.BlockSpec((g, c), lambda i: (0, 0)),
-                  pl.BlockSpec((c, bf), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((g, bf), lambda i: (0, i)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((g, bc), lambda i, k: (0, k)),
+                  pl.BlockSpec((bc, bf), lambda i, k: (k, i))],
+        out_specs=pl.BlockSpec((g, bf), lambda i, k: (0, i)),
         out_shape=jax.ShapeDtypeStruct((g, x.shape[1]), jnp.float32),
         interpret=interpret,
     )(w.astype(jnp.float32), x.astype(jnp.float32))
@@ -157,6 +176,11 @@ def mix_aggregate_pallas(x: jax.Array, w: jax.Array, *,
 
 def _stc_reduce_kernel(x_ref, r_ref, thr_ref, sum_ref, cnt_ref, *,
                        n_valid: int, block: int):
+    # Two-bank revolving accumulator: even feature tiles land in bank 0,
+    # odd tiles in bank 1, so consecutive grid steps extend *independent*
+    # serial FP-add chains (the banks are summed on the host side).  That
+    # halves the loop-carried latency the pipeline must hide while the
+    # next x tile streams in.
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -167,8 +191,10 @@ def _stc_reduce_kernel(x_ref, r_ref, thr_ref, sum_ref, cnt_ref, *,
     d = x_ref[...].astype(jnp.float32) - r_ref[...].astype(jnp.float32)
     idx = j * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
     keep = jnp.logical_and(jnp.abs(d) >= thr_ref[0, 0], idx < n_valid)
-    sum_ref[...] += jnp.sum(jnp.where(keep, jnp.abs(d), 0.0)).reshape(1, 1)
-    cnt_ref[...] += jnp.sum(keep.astype(jnp.float32)).reshape(1, 1)
+    bank = (jax.lax.broadcasted_iota(jnp.int32, (1, 2), 1)
+            == j % 2).astype(jnp.float32)
+    sum_ref[...] += jnp.sum(jnp.where(keep, jnp.abs(d), 0.0)) * bank
+    cnt_ref[...] += jnp.sum(keep.astype(jnp.float32)) * bank
 
 
 def _stc_apply_kernel(x_ref, r_ref, thr_ref, mu_ref, mask_ref, o_ref):
@@ -214,12 +240,14 @@ def stc_rows_pallas(x: jax.Array, ref_row: jax.Array, mask: jax.Array,
         in_specs=[pl.BlockSpec((1, blk), lambda i, j: (i, j)),
                   pl.BlockSpec((1, blk), lambda i, j: (0, j)),
                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
-        out_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((c, 1), jnp.float32),
-                   jax.ShapeDtypeStruct((c, 1), jnp.float32)],
+        out_specs=[pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
+                   pl.BlockSpec((1, 2), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((c, 2), jnp.float32),
+                   jax.ShapeDtypeStruct((c, 2), jnp.float32)],
         interpret=interpret,
     )(xp, rp, thr2)
+    ssum = ssum.sum(axis=1, keepdims=True)                      # (C, 1)
+    cnt = cnt.sum(axis=1, keepdims=True)
     mu = ssum / jnp.maximum(cnt, 1.0)                           # (C, 1)
     mask2 = mask.astype(jnp.int32).reshape(c, 1)
     out = pl.pallas_call(

@@ -13,7 +13,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_host_mesh", "make_clients_mesh",
-           "activate_mesh", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "mesh_axes"]
+           "make_fl_mesh", "activate_mesh", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+           "mesh_axes"]
 
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -64,6 +65,35 @@ def make_clients_mesh(num_clients: int, max_devices: int | None = None):
         n = max(1, min(n, max_devices))
     k = max(d for d in range(1, n + 1) if num_clients % d == 0)
     return jax.make_mesh((k,), ("clients",), **_auto_axis_types_kwargs(1))
+
+
+def make_fl_mesh(num_clients: int, model: int = 1,
+                 max_devices: int | None = None):
+    """2-D ``("clients", "model")`` mesh for the overlapped FL data plane.
+
+    ``model`` is the requested model-axis size: during diffusion hops the
+    flattened per-client parameter block is split feature-wise over
+    ``"model"`` (each ring-shift ``ppermute`` then moves only ``F/model``
+    bytes per link) while client slots shard over ``"clients"``; outside the
+    hops the leading client axis is sharded over the *combined*
+    ``("clients", "model")`` axis, so every device trains an equal block of
+    clients.  Unlike :func:`make_clients_mesh` there is no divisibility
+    requirement on ``num_clients`` — the executor pads the slot axis
+    (zero-weighted padding slots) to the mesh size.
+
+    The model axis is clamped to a divisor of the device count; remaining
+    devices land on ``"clients"``.  On one device this degenerates to a
+    ``(1, 1)`` mesh — same program, no collectives on the wire.
+    """
+    n = len(jax.devices())
+    if max_devices is not None:
+        n = max(1, min(n, max_devices))
+    km = max(d for d in range(1, max(1, min(model, n)) + 1) if n % d == 0)
+    # Never more client shards than clients — padding a 4096-device mesh to
+    # N=20 would be absurd; excess devices simply sit out of the mesh.
+    kc = min(n // km, max(1, num_clients))
+    return jax.make_mesh((kc, km), ("clients", "model"),
+                         **_auto_axis_types_kwargs(2))
 
 
 def activate_mesh(mesh):

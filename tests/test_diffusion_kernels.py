@@ -33,6 +33,18 @@ def test_mix_aggregate_matches_ref(c, f, g):
                                atol=1e-5, rtol=1e-5)
 
 
+def test_mix_aggregate_client_tiled_accumulate_matches_ref():
+    """C > block_c streams client tiles through the revolving accumulator;
+    the result must match the single-slab product (and C % block_c != 0
+    must be handled by zero padding)."""
+    x = jnp.asarray(RNG.normal(size=(90, 700)), jnp.float32)
+    w = jnp.asarray(RNG.random(size=(90, 90)), jnp.float32)
+    out = mix_aggregate_pallas(x, w, block_c=32, interpret=True)
+    want = jnp.einsum("gc,cf->gf", w, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
 def test_mix_aggregate_tree_paths_agree():
     """Tree-level dispatch: the per-leaf XLA chain and the flattened Pallas
     pass compute the same mix and the same (squeezed) aggregate."""

@@ -72,6 +72,51 @@ def test_fig7_scaling_targets_large_n_with_churn():
     assert all(c.spec.fl.churn_rate > 0 for c in cells)
 
 
+def test_fig7_full_grid_drops_auction_strategies_at_large_n():
+    """At N ≥ 1024 the Hungarian auction control plane is O(N³); the sweep's
+    ``value_strategies`` override keeps only the auction-free strategies
+    there while the ≤256 points still compare against feddif."""
+    cells = expand_sweep("fig7_scaling", smoke=False)
+    by_n = {}
+    for c in cells:
+        by_n.setdefault(c.value, set()).add(c.strategy)
+    assert max(by_n) >= 4096
+    for n, strategies in by_n.items():
+        if n >= 1024:
+            assert "feddif" not in strategies, n
+            assert "d2d_random_walk" in strategies, n
+        else:
+            assert "feddif" in strategies, n
+
+
+def test_auto_engine_downgrades_sharded_below_crossover():
+    """engine="auto" swaps sharded→fleet under the measured N-crossover (the
+    mesh dispatch overhead regime) and keeps sharded at/above it; the chosen
+    executor lands in the cell record."""
+    from repro.experiments.orchestrator import (SHARDED_CROSSOVER_N,
+                                                _pick_executor)
+    cells = expand_sweep("fig7_scaling", smoke=True, executor="sharded")
+    for cell in cells:
+        picked = _pick_executor(cell, "auto")
+        want = ("fleet" if cell.spec.fl.num_clients < SHARDED_CROSSOVER_N
+                else "sharded")
+        assert picked.spec.fl.executor == want, cell.label
+        # explicit engines leave the user's executor choice alone
+        assert _pick_executor(cell, "loop").spec.fl.executor == "sharded"
+
+
+def test_run_cell_records_downgraded_executor():
+    from repro.experiments.orchestrator import run_cell
+    cell = next(c for c in expand_sweep(
+        "fig7_scaling", smoke=True, executor="sharded", num_samples=400)
+        if c.strategy == "fedavg" and c.value == 20)
+    cell = dataclasses.replace(
+        cell, spec=dataclasses.replace(
+            cell.spec, fl=dataclasses.replace(cell.spec.fl, rounds=1)))
+    rec = run_cell(cell, seeds=(0,))
+    assert rec["executor"] == "fleet"
+
+
 def test_churned_cells_replicate_on_loop_engine():
     """Churn masks are applied schedule-side in run_federated; the seed_vmap
     engine would skip them, so engine picking must route to the loop."""

@@ -44,9 +44,14 @@ def test_host_fleet_sharded_parity_n64(strategy):
     (``kernels/diffusion.py``): STC-compressed hops exercise ``stc_topk``
     and the gossip MixOp exercises ``mix_aggregate`` on all three planes
     (with ``implementation="auto"`` — the reference twins here, the Pallas
-    bodies on TPU / under ``REPRO_KERNELS_IMPL``).
+    bodies on TPU / under ``REPRO_KERNELS_IMPL``).  The sharded arm forces
+    the fused round plane ("auto" would take op-by-op below
+    ``FUSED_MIN_CLIENTS``) so the whole-round program is what parity
+    certifies.
     """
-    results = {ex: run_experiment(_spec(strategy, ex))
+    results = {ex: run_experiment(_spec(strategy, ex,
+                                        **({"shard_overlap": "on"}
+                                           if ex == "sharded" else {})))
                for ex in ("host", "fleet", "sharded")}
     host = results["host"]
     for ex in ("fleet", "sharded"):
@@ -81,6 +86,7 @@ def test_sharded_runs_every_schedule_op_kind():
     aggregation) all execute on the sharded plane."""
     for strategy in ("tthf", "feddif_stc", "stc"):
         res = run_experiment(_spec(strategy, "sharded", clients=8, rounds=1,
+                                   shard_overlap="on",
                                    tthf_cluster_size=4, tthf_global_period=1))
         assert len(res.accuracy) == 1
         assert np.all(np.isfinite(np.concatenate(
@@ -96,12 +102,13 @@ def test_sharded_parity_on_multi_device_mesh():
 import numpy as np, jax
 assert len(jax.devices()) == 2, jax.devices()
 from repro.fl import ExperimentSpec, FLConfig, run_experiment
-def spec(executor):
+def spec(executor, **kw):
     return ExperimentSpec(task="fcn", alpha=0.5, num_samples=240,
         fl=FLConfig(strategy="feddif", rounds=1, num_clients=8, num_models=8,
                     seed=0, topology_seed=1, max_diffusion_rounds=3,
-                    executor=executor))
-host, shard = run_experiment(spec("host")), run_experiment(spec("sharded"))
+                    executor=executor, **kw))
+host = run_experiment(spec("host"))
+shard = run_experiment(spec("sharded", shard_overlap="on"))
 assert host.ledger.as_dict() == shard.ledger.as_dict()
 for a, b in zip(jax.tree.leaves(host.final_params),
                 jax.tree.leaves(shard.final_params)):
@@ -118,6 +125,57 @@ print("MULTI_DEVICE_PARITY_OK")
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "MULTI_DEVICE_PARITY_OK" in out.stdout
+
+
+def test_hop_transport_parity_single_device():
+    """``shard_hop_transport`` must not change results — "auto" resolves to
+    gather for the tiny FCN, so force the ring plane explicitly and compare
+    against gather (identical ledgers, matching params)."""
+    runs = {t: run_experiment(_spec("feddif", "sharded", clients=8,
+                                    rounds=1, shard_overlap="on",
+                                    shard_hop_transport=t))
+            for t in ("gather", "ring")}
+    assert (runs["gather"].ledger.as_dict()
+            == runs["ring"].ledger.as_dict())
+    for a, b in zip(jax.tree.leaves(runs["gather"].final_params),
+                    jax.tree.leaves(runs["ring"].final_params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-4, rtol=5e-3)
+
+
+def test_ring_transport_parity_on_multi_device_mesh():
+    """Forced ring transport on a 2-device mesh: the fused round's
+    double-buffered ppermute shifts really cross shards and must still
+    match the host reference."""
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.fl import ExperimentSpec, FLConfig, run_experiment
+def spec(executor, **kw):
+    return ExperimentSpec(task="fcn", alpha=0.5, num_samples=240,
+        fl=FLConfig(strategy="feddif", rounds=2, num_clients=8, num_models=8,
+                    seed=0, topology_seed=1, max_diffusion_rounds=3,
+                    executor=executor, **kw))
+host = run_experiment(spec("host"))
+shard = run_experiment(spec("sharded", shard_overlap="on",
+                            shard_hop_transport="ring"))
+assert host.ledger.as_dict() == shard.ledger.as_dict()
+for a, b in zip(jax.tree.leaves(host.final_params),
+                jax.tree.leaves(shard.final_params)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=5e-4, rtol=5e-3)
+print("RING_TRANSPORT_PARITY_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
+                                                              ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RING_TRANSPORT_PARITY_OK" in out.stdout
 
 
 # ------------------------------------------------------- permutation tables
