@@ -61,21 +61,28 @@ def fl_round_roofline(*, param_count: float, train_rows: float,
                       clients: int, d2d_models: float, uldl_models: float,
                       round_s: float, mix_rows: float = 1.0,
                       bits_per_param: int = 32,
+                      d2d_bits: float | None = None,
                       peak_flops: float | None = None) -> dict:
     """Roofline readout for ONE FL communication round.
 
     FLOP model: 6·P per trained sample row (forward 2·P + backward 4·P for
     a dense model of P parameters) plus 2·C·P per mixed/aggregated output
     row (the Eq. 10/11 weighted reduction).  Bytes moved on the wire are
-    the Eq.-15 ledger terms — every transmitted model (D2D diffusion hop,
-    uplink or downlink) moves one P-parameter payload.  ``round_s`` is the
-    measured steady-state round wall-clock; ``utilization`` is achieved
-    FLOP/s over :func:`measure_machine_peak` (or ``peak_flops``).
+    the Eq.-15 ledger terms — every up/downlink moves one fp32
+    P-parameter payload, and each D2D hop moves ``d2d_bits`` when given
+    (the int8-packed adapter wire, ``spec_adapter_bits``) else the same
+    fp32 payload; without the override the bytes side would overstate
+    quantized-arm comm volume 4x+.  ``round_s`` is the measured
+    steady-state round wall-clock; ``utilization`` is achieved FLOP/s over
+    :func:`measure_machine_peak` (or ``peak_flops``).
     """
     peak = peak_flops if peak_flops is not None else measure_machine_peak()
     flops = (6.0 * param_count * train_rows
              + 2.0 * param_count * clients * mix_rows)
-    moved = (d2d_models + uldl_models) * param_count * bits_per_param / 8.0
+    if d2d_bits is None:
+        d2d_bits = param_count * bits_per_param
+    moved = (d2d_models * d2d_bits
+             + uldl_models * param_count * bits_per_param) / 8.0
     achieved = flops / max(round_s, 1e-9)
     return {
         "machine_peak_flops": peak,

@@ -475,6 +475,152 @@ def fleet_scaling(full: bool):
         print(f"fleet_scaling,WARNING,{msg}", flush=True)
 
 
+def lm_hops(full: bool):
+    """FedDif-over-LMs hop-payload bench (the adapter hop plane).
+
+    Three payload arms on the small LoRA transformer (``task="lm"``) under
+    FedDif: ``full_f32`` (adapter view off — every D2D hop moves the whole
+    fp32 model), ``adapter_f32`` (hops move only the trainable LoRA
+    adapter, base broadcast once at round 0) and ``adapter_int8`` (adapter
+    hops additionally cross the wire int8-packed via the
+    ``quant_pack``/``quant_unpack`` kernel pair).  Each arm runs on all
+    three executors — host / fleet / sharded — and their Eq.-15 ledgers
+    must be *bit-identical per arm*; the ledger's ``transmitted_bits`` must
+    also decompose exactly into
+    ``uplinks·view_f32_bits + d2d_hops·hop_bits`` with the analytic
+    ``spec_adapter_bits`` figures, so the measured wire volume and the
+    analytic payload model cannot drift apart.  Headline numbers:
+    bytes-per-hop per arm, the full_f32/adapter_int8 payload reduction
+    (budget-gated ≥ 50x), the int8-vs-f32 accuracy gap (≤ 2 pts absolute)
+    and the steady-round wall-clock (``min(round_wall_s[1:])`` on the
+    fleet plane) per arm.  The roofline readout reports the int8 arm with
+    ``d2d_bits`` so the bytes side reflects the packed wire.  Emits
+    ``BENCH_lm_hops.json``."""
+    import dataclasses
+
+    import jax
+    from benchmarks.roofline import fl_round_roofline, measure_machine_peak
+    from repro.experiments.artifacts import write_bench_json
+    from repro.fl import ExperimentSpec, FLConfig, run_experiment
+    from repro.fl.experiment import spec_adapter_bits, spec_model_bits
+
+    n_devices = len(jax.devices())
+    clients = 8
+    rounds = 6 if full else 3
+    samples = 4096 if full else 1536
+
+    def make_spec(executor, adapter_hops, hop_quant):
+        return ExperimentSpec(
+            task="lm", alpha=0.5, dim=32, num_samples=samples,
+            adapter_hops=adapter_hops,
+            fl=FLConfig(strategy="feddif", rounds=rounds,
+                        num_clients=clients, num_models=clients, seed=0,
+                        topology_seed=0, max_diffusion_rounds=4,
+                        executor=executor, hop_quant=hop_quant))
+
+    # arm -> (adapter_hops, hop_quant); full_f32 is the no-view baseline.
+    arms = {"full_f32": (False, "none"),
+            "adapter_f32": (True, "none"),
+            "adapter_int8": (True, "int8")}
+    executors = ("host", "fleet", "sharded")
+
+    cells = []
+    arm_stats = {}
+    ledger_parity = True
+    ledger_bits_match = True
+    for arm, (adapter_hops, hop_quant) in arms.items():
+        spec0 = make_spec("host", adapter_hops, hop_quant)
+        hop_bits = spec_adapter_bits(spec0)          # what one D2D hop moves
+        view_f32_bits = spec_adapter_bits(           # what one uplink moves
+            dataclasses.replace(
+                spec0, fl=dataclasses.replace(spec0.fl, hop_quant="none")))
+        ledgers, results = {}, {}
+        for executor in executors:
+            spec = make_spec(executor, adapter_hops, hop_quant)
+            t0 = time.time()
+            r = run_experiment(spec)
+            dt = time.time() - t0
+            ledgers[executor] = r.ledger.as_dict()
+            results[executor] = r
+            steady = min(r.round_wall_s[1:])
+            cells.append({"arm": arm, "executor": executor,
+                          "wall_clock_s": dt, "round_s": steady,
+                          "acc": max(r.accuracy),
+                          "subframes": r.ledger.subframes,
+                          "transmitted_bits": r.ledger.transmitted_bits})
+            print(f"lm_hops,arm={arm},executor={executor},sec={dt:.1f},"
+                  f"round_s={steady:.2f},acc={max(r.accuracy):.4f},"
+                  f"bits={r.ledger.transmitted_bits:.3e}", flush=True)
+        parity = (ledgers["host"] == ledgers["fleet"] == ledgers["sharded"])
+        ledger_parity &= parity
+        led = ledgers["host"]
+        d2d_hops = led["transmitted_models"] - led["uplink_models"]
+        expected = (led["uplink_models"] * view_f32_bits
+                    + d2d_hops * hop_bits)
+        bits_match = bool(np.isclose(led["transmitted_bits"], expected,
+                                     rtol=1e-9, atol=0.0))
+        ledger_bits_match &= bits_match
+        arm_stats[arm] = {
+            "hop_bits": hop_bits, "bytes_per_hop": hop_bits / 8.0,
+            "view_f32_bits": view_f32_bits, "d2d_hops": d2d_hops,
+            "uplink_models": led["uplink_models"],
+            "downlink_models": led["downlink_models"],
+            "transmitted_bits": led["transmitted_bits"],
+            "acc": max(results["host"].accuracy),
+            "round_s": min(results["fleet"].round_wall_s[1:]),
+            "ledger_parity": parity, "ledger_bits_match": bits_match,
+        }
+        print(f"lm_hops,arm={arm},bytes_per_hop={hop_bits / 8.0:.0f},"
+              f"d2d_hops={d2d_hops},ledger_parity={parity},"
+              f"ledger_bits_match={bits_match}", flush=True)
+    assert ledger_parity, \
+        "host/fleet/sharded must charge identical ledgers per arm"
+    assert ledger_bits_match, \
+        "measured transmitted_bits must match the analytic payload model"
+
+    reduction_int8 = (arm_stats["full_f32"]["hop_bits"]
+                      / arm_stats["adapter_int8"]["hop_bits"])
+    reduction_f32 = (arm_stats["full_f32"]["hop_bits"]
+                     / arm_stats["adapter_f32"]["hop_bits"])
+    acc_gap = abs(arm_stats["adapter_int8"]["acc"]
+                  - arm_stats["adapter_f32"]["acc"])
+    assert reduction_int8 >= 50.0, \
+        f"int8 adapter hops must be >=50x smaller (got {reduction_int8:.1f}x)"
+
+    # Roofline for one steady int8-arm round: d2d_bits carries the packed
+    # wire so bytes-moved reflects what the transport actually ships.
+    spec = make_spec("fleet", True, "int8")
+    st = arm_stats["adapter_int8"]
+    roofline = fl_round_roofline(
+        param_count=spec_model_bits(spec) / spec.fl.bits_per_param,
+        train_rows=float(samples) * (1.0 - spec.test_frac),
+        clients=clients,
+        d2d_models=st["d2d_hops"] / rounds,
+        uldl_models=(st["uplink_models"] + st["downlink_models"]) / rounds,
+        round_s=st["round_s"],
+        bits_per_param=spec.fl.bits_per_param,
+        d2d_bits=st["hop_bits"],
+        peak_flops=measure_machine_peak())
+
+    record = {
+        "device_count": n_devices, "host_cpus": os.cpu_count() or 1,
+        "clients": clients, "rounds": rounds, "num_samples": samples,
+        "cells": cells, "arms": arm_stats,
+        "ledger_parity": ledger_parity,
+        "ledger_bits_match": ledger_bits_match,
+        "payload_reduction_int8": reduction_int8,
+        "payload_reduction_f32": reduction_f32,
+        "acc_gap_int8_vs_f32": acc_gap,
+        "roofline": roofline,
+        "max_wall_clock_s": max(c["wall_clock_s"] for c in cells),
+    }
+    write_bench_json("lm_hops", record)
+    print(f"lm_hops,payload_reduction_int8={reduction_int8:.1f}x,"
+          f"payload_reduction_f32={reduction_f32:.1f}x,"
+          f"acc_gap={acc_gap:.4f},ledger_parity={ledger_parity},"
+          f"ledger_bits_match={ledger_bits_match}", flush=True)
+
+
 def kernel_data_plane(full: bool):
     """FL diffusion data-plane kernels (kernels/diffusion.py): parity of
     the Pallas bodies (interpret mode) against the reference twins, and the
@@ -654,7 +800,7 @@ def appendix_scenarios(full: bool):
 
 BENCHES = [fig2_convergence, fig3_alpha_sweep, fig4_epsilon_sweep,
            fig5_qos_sweep, fig6_tasks, table1_accuracy, table2_comm_eff,
-           planner_speedup, executor_speedup, fleet_scaling,
+           planner_speedup, executor_speedup, fleet_scaling, lm_hops,
            kernel_data_plane, appendix_scenarios, kernels_microbench,
            roofline_summary]
 
@@ -748,15 +894,17 @@ def check_budgets(budgets_path: str = "benchmarks/budgets.json") -> int:
 
 
 def _force_cpu_mesh_for(bench_names: list) -> None:
-    """fleet_scaling needs >1 device to mean anything; force a 2-device CPU
-    mesh when it is the *only* selected bench (CI runs it standalone),
-    XLA_FLAGS has no explicit count yet, and jax has not been imported (the
-    flag is read at first import).  Full-suite runs are left on the real
-    device topology — forcing virtual devices there would time every other
-    bench under a configuration its budget was not calibrated for; the
-    speedup budget checks are gated on the artifact's ``device_count``."""
+    """fleet_scaling / lm_hops need >1 device to mean anything; force a
+    2-device CPU mesh when only multi-device benches are selected (CI runs
+    them standalone), XLA_FLAGS has no explicit count yet, and jax has not
+    been imported (the flag is read at first import).  Full-suite runs are
+    left on the real device topology — forcing virtual devices there would
+    time every other bench under a configuration its budget was not
+    calibrated for; the speedup budget checks are gated on the artifact's
+    ``device_count``."""
     flags = os.environ.get("XLA_FLAGS", "")
-    if (bench_names == ["fleet_scaling"] and "jax" not in sys.modules
+    if (bench_names and set(bench_names) <= {"fleet_scaling", "lm_hops"}
+            and "jax" not in sys.modules
             and "xla_force_host_platform_device_count" not in flags):
         os.environ["XLA_FLAGS"] = (
             flags + " --xla_force_host_platform_device_count=2").strip()

@@ -262,6 +262,27 @@ register(SweepDef(
 ))
 
 register(SweepDef(
+    name="fig_lm",
+    figure="LM diffusion (beyond paper)",
+    axis="strategy",
+    description="FedDif-over-LMs: strategies on the small LoRA transformer "
+                "with Dirichlet-partitioned token data, hopping the "
+                "int8-packed trainable-adapter view (repro.fl.adapters) — "
+                "the Eq.-15 ledger charges packed adapter bits per D2D hop "
+                "plus a one-time round-0 base broadcast.",
+    values=("fedavg", "d2d_random_walk", "feddif"),
+    smoke_values=("fedavg", "feddif"),
+    rounds=10,
+    smoke_rounds=2,
+    num_clients=8,
+    smoke_num_clients=4,
+    num_samples=4096,
+    smoke_num_samples=768,
+    spec_overrides={"task": "lm", "dim": 32},
+    fl_overrides={"hop_quant": "int8", "max_diffusion_rounds": 4},
+))
+
+register(SweepDef(
     name="table2_strategies",
     figure="Table II",
     axis="strategy",

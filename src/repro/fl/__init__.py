@@ -1,9 +1,12 @@
 from repro.fl.models import TaskModel, build_task_model, TASK_MODELS
 from repro.fl.client import make_local_update, local_update
 from repro.fl.compression import stc_compress, compressed_bits
-from repro.fl.server import FLConfig, FLResult, run_federated, STRATEGIES
+from repro.fl.adapters import AdapterView, make_adapter_view, packed_bits
+from repro.fl.server import (FLConfig, FLResult, run_federated, STRATEGIES,
+                             HOP_QUANTS)
 from repro.fl.schedulers import SCHEDULERS, RoundContext
 from repro.fl.executors import (EXECUTORS, FleetExecutor, HostExecutor,
                                 ShardedFleetExecutor)
 from repro.fl.fedprox import make_prox_local_update
-from repro.fl.experiment import ExperimentSpec, run_experiment
+from repro.fl.experiment import (ExperimentSpec, run_experiment,
+                                 spec_adapter_bits, spec_model_bits)

@@ -50,6 +50,14 @@ Two data planes consume the same schedule object:
 
   On a 1-device mesh both planes degenerate to the fleet program.
 
+Under ``FLConfig.hop_quant == "int8"`` every PermuteOp payload crosses the
+wire int8-packed (``repro.fl.adapters``): each executor applies exactly one
+pack→unpack roundtrip per hop to every slot — the host roundtrips slot
+trees, the fleet roundtrips the stacked pytree, and the sharded planes move
+the packed codes + scales through the very ring/gather collectives that
+implement the hop.  Per-row packing commutes with row movement, so the
+three placements stay numerically identical.
+
 Ledger charging lives in none of them: :func:`~repro.core.schedule
 .charge_schedule` replays the schedule's wire events, so all executors
 report identical communication metrics by construction.
@@ -71,6 +79,9 @@ from repro.core import aggregation as agg
 from repro.core.schedule import MixOp, PermuteOp, RoundSchedule, TrainOp
 from repro.distributed.fedshard import diffuse_params, masked_stc_compress
 from repro.distributed.sharding import CLIENT_AXIS, FL_AXES, MODEL_AXIS
+from repro.fl.adapters import (pack_rows, quant_roundtrip_rows,
+                               quant_roundtrip_slot, quant_roundtrip_tree,
+                               unpack_rows)
 from repro.fl.compression import stc_compress
 from repro.fl.schedulers import PROX_STRATEGIES
 from repro.kernels import ops as kernel_ops
@@ -101,6 +112,7 @@ class HostExecutor:
         self.local_update = local_update
         self.client_batches = client_batches
         self.cfg = cfg
+        self.quant = str(getattr(cfg, "hop_quant", "none")) == "int8"
 
     def _train(self, slots: list, mask: np.ndarray) -> None:
         for c in np.flatnonzero(mask):
@@ -149,6 +161,11 @@ class HostExecutor:
                         delta = stc_compress(_tree_sub(slots[s], ref),
                                              sched.stc_sparsity)
                         slots[s] = _tree_add(ref, delta)
+                if self.quant:
+                    # int8 wire: what each destination decodes is the
+                    # pack→unpack of the payload (hop is a bijection, so
+                    # every slot moves and is roundtripped exactly once).
+                    slots = [quant_roundtrip_slot(s) for s in slots]
                 slots = [slots[int(op.src_of_dst[c])] for c in range(c_slots)]
                 self._train(slots, op.train_mask)
             elif isinstance(op, MixOp):
@@ -178,6 +195,7 @@ class FleetExecutor:
         self.loss_fn = loss_fn
         self.client_batches = client_batches
         self.cfg = cfg
+        self.quant = str(getattr(cfg, "hop_quant", "none")) == "int8"
         self.prox = cfg.strategy in PROX_STRATEGIES
         opt = opt_lib.sgd(momentum=cfg.momentum)
         mu = float(cfg.prox_mu)
@@ -290,6 +308,10 @@ class FleetExecutor:
             global_params)
 
     def _permute(self, params: Params, op: PermuteOp) -> Params:
+        if self.quant:
+            # int8 wire: roundtrip the stacked payload per client row, then
+            # move the decoded rows (packing commutes with row gathers).
+            params = quant_roundtrip_tree(params)
         return diffuse_params(params, jnp.asarray(op.src_of_dst))
 
     def _mix(self, params: Params, op: MixOp, num_slots: int) -> Params:
@@ -660,12 +682,24 @@ class ShardedFleetExecutor(FleetExecutor):
                 out = out.at[recv[shift]].set(buf)
             return out[:nl_hop]
 
+        quant = self.quant
+
         def permute_local(params, send_all, recv_all):
             # Routing tables travel replicated ((kc, kc, nl_hop)); each ring
             # slot selects its row by mesh position.
             ic = jax.lax.axis_index(CLIENT_AXIS)
             send, recv = send_all[ic], recv_all[ic]
             if km == 1:
+                if quant:
+                    # int8 wire: ring-shift the packed codes and their
+                    # scales instead of fp32 rows, decode at the
+                    # destination (shift_rows is dtype-generic).
+                    flat, spec = stack_ravel(params)
+                    q, s = pack_rows(flat)
+                    q = shift_rows(q, send, recv)
+                    s = shift_rows(s, send, recv)
+                    return stack_unravel(unpack_rows(q, s, flat.shape[1]),
+                                         spec)
                 return jax.tree.map(
                     lambda x: shift_rows(x, send, recv), params)
             # Hop layout: feature-split every leaf over "model" so one ring
@@ -675,6 +709,12 @@ class ShardedFleetExecutor(FleetExecutor):
             # linear device order is ic·km + im), which is exactly the
             # contiguity _permutation_tables assumes.
             flat, spec = stack_ravel(params)
+            if quant:
+                # A km-way feature split cuts across quantization row-
+                # blocks, so the packed wire needs km == 1 (or the gather
+                # transport, which moves whole rows); here the payload is
+                # decoded locally — numerically identical hop, fp32 moves.
+                flat = quant_roundtrip_rows(flat)
             f = flat.shape[1]
             fpad = (-f) % km
             if fpad:
@@ -698,11 +738,22 @@ class ShardedFleetExecutor(FleetExecutor):
             # rendezvous per hop vs the ring's kc — the fast transport while
             # the gathered stack fits GATHER_BUDGET_BYTES.
             flat, spec = stack_ravel(params)
-            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)
             d = jax.lax.axis_index(CLIENT_AXIS)
             if km > 1:
                 d = d * km + jax.lax.axis_index(MODEL_AXIS)
             rows = jax.lax.dynamic_slice_in_dim(perm, d * nl, nl)
+            if quant:
+                # int8 wire: gather the packed codes + scales (whole client
+                # rows, so blocks stay intact at any km), decode the taken
+                # destination rows.
+                q, s = pack_rows(flat)
+                fq = jax.lax.all_gather(q, axes, axis=0, tiled=True)
+                fs = jax.lax.all_gather(s, axes, axis=0, tiled=True)
+                return stack_unravel(
+                    unpack_rows(jnp.take(fq, rows, axis=0),
+                                jnp.take(fs, rows, axis=0), flat.shape[1]),
+                    spec)
+            full = jax.lax.all_gather(flat, axes, axis=0, tiled=True)
             return stack_unravel(jnp.take(full, rows, axis=0), spec)
 
         self._local_permute_gather = gather_permute_local
@@ -716,17 +767,39 @@ class ShardedFleetExecutor(FleetExecutor):
             ic = jax.lax.axis_index(CLIENT_AXIS)
             send, recv = send_all[ic], recv_all[ic]     # (D, kc, mbh)
             flat, spec = stack_ravel(params)
+            if quant:
+                # int8 wire: pack the pre-hop block once; each chunk then
+                # routes its slice of codes + scales through the same
+                # double-buffered shifts and decodes on arrival.
+                qf, sf = pack_rows(flat)
             chunks = []
             for j in range(D):
-                out = jnp.zeros((mbh + 1, flat.shape[1]), flat.dtype)
-                for shift in range(kc):
-                    buf = jnp.take(flat, send[j, shift], axis=0)
-                    if shift:
-                        buf = jax.lax.ppermute(
-                            buf, CLIENT_AXIS,
-                            [(s, (s + shift) % kc) for s in range(kc)])
-                    out = out.at[recv[j, shift]].set(buf)
-                chunk = stack_unravel(out[:mbh], spec)
+                if quant:
+                    outq = jnp.zeros((mbh + 1, qf.shape[1]), qf.dtype)
+                    outs = jnp.zeros((mbh + 1, sf.shape[1]), sf.dtype)
+                    for shift in range(kc):
+                        bq = jnp.take(qf, send[j, shift], axis=0)
+                        bs = jnp.take(sf, send[j, shift], axis=0)
+                        if shift:
+                            links = [(s, (s + shift) % kc)
+                                     for s in range(kc)]
+                            bq = jax.lax.ppermute(bq, CLIENT_AXIS, links)
+                            bs = jax.lax.ppermute(bs, CLIENT_AXIS, links)
+                        outq = outq.at[recv[j, shift]].set(bq)
+                        outs = outs.at[recv[j, shift]].set(bs)
+                    chunk = stack_unravel(
+                        unpack_rows(outq[:mbh], outs[:mbh], flat.shape[1]),
+                        spec)
+                else:
+                    out = jnp.zeros((mbh + 1, flat.shape[1]), flat.dtype)
+                    for shift in range(kc):
+                        buf = jnp.take(flat, send[j, shift], axis=0)
+                        if shift:
+                            buf = jax.lax.ppermute(
+                                buf, CLIENT_AXIS,
+                                [(s, (s + shift) % kc) for s in range(kc)])
+                        out = out.at[recv[j, shift]].set(buf)
+                    chunk = stack_unravel(out[:mbh], spec)
                 if steps:
                     mom = jax.tree.map(
                         lambda p: jnp.zeros_like(p, jnp.float32), chunk)

@@ -13,24 +13,44 @@ import numpy as np
 
 from repro.data.partitioner import dirichlet_partition
 from repro.data.pipeline import make_client_loaders
-from repro.data.synthetic import gaussian_image_dataset
-from repro.fl.models import build_task_model
+from repro.data.synthetic import (ImageDataset, class_labels_for_lm,
+                                  gaussian_image_dataset, lm_corpus)
+from repro.fl.models import TASK_MODELS, build_task_model
 from repro.fl.server import FLConfig, FLResult, run_federated
 
 __all__ = ["ExperimentSpec", "run_experiment", "load_experiment_data",
-           "spec_model_bits"]
+           "spec_model_bits", "spec_adapter_bits"]
 
 
 @dataclasses.dataclass
 class ExperimentSpec:
-    task: str = "fcn"                  # logistic|svm|fcn|lstm|cnn
+    task: str = "fcn"                  # one of repro.fl.models.TASK_MODELS
     alpha: float = 1.0                 # Dirichlet concentration
     num_samples: int = 12_000
     num_classes: int = 10
-    dim: int = 64
+    dim: int = 64                      # feature dim; seq_len for task="lm"
     test_frac: float = 0.2
     fl: FLConfig = dataclasses.field(default_factory=FLConfig)
     data_seed: int = 0
+    adapter_hops: bool = True          # hop the trainable-adapter view when
+                                       # the task has one (TaskModel.split);
+                                       # full-params tasks are untouched
+                                       # (identity view, bit-identical runs)
+
+    def __post_init__(self):
+        # Validate at construction — a bad task/dim otherwise surfaces as
+        # a shape error deep inside the round loop.
+        if self.task not in TASK_MODELS:
+            raise ValueError(f"unknown task {self.task!r}; expected one of "
+                             f"{TASK_MODELS}")
+        if self.task == "cnn":
+            side = int(self.dim ** 0.5)
+            if side * side != self.dim:
+                raise ValueError(f"task='cnn' needs a square feature dim "
+                                 f"(got dim={self.dim})")
+        if self.task == "lstm" and self.dim % 8 != 0:
+            raise ValueError(f"task='lstm' needs dim divisible by 8 "
+                             f"(got dim={self.dim})")
 
 
 def load_experiment_data(spec: ExperimentSpec, with_loaders: bool = True):
@@ -46,8 +66,19 @@ def load_experiment_data(spec: ExperimentSpec, with_loaders: bool = True):
     is unaffected) — the sweep pre-planner only needs ``part``.
     """
     rng = np.random.default_rng(spec.data_seed)
-    ds = gaussian_image_dataset(spec.num_samples, spec.num_classes, spec.dim,
-                                seed=spec.data_seed)
+    if spec.task == "lm":
+        # Token rows: spec.dim is the sequence length, one "sample" is one
+        # document; labels are the dominant-token buckets that drive the
+        # Dirichlet partition (non-IID unigram shards per client).
+        from repro.fl.models import LM_VOCAB
+        tokens = lm_corpus(spec.num_samples * spec.dim, vocab=LM_VOCAB,
+                           seed=spec.data_seed)
+        y = class_labels_for_lm(tokens, spec.num_classes, spec.dim)
+        x = np.asarray(tokens[:len(y) * spec.dim]).reshape(len(y), spec.dim)
+        ds = ImageDataset(x.astype(np.int32), y, spec.num_classes)
+    else:
+        ds = gaussian_image_dataset(spec.num_samples, spec.num_classes,
+                                    spec.dim, seed=spec.data_seed)
     test, train = ds.split(spec.test_frac, rng)
     part = dirichlet_partition(train.y, spec.fl.num_clients, spec.alpha, rng)
     loaders = (make_client_loaders(train, part, spec.fl.batch_size,
@@ -62,6 +93,26 @@ def spec_model_bits(spec: ExperimentSpec) -> float:
     from repro.core.aggregation import model_bits
     model = build_task_model(spec.task, spec.dim, spec.num_classes)
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return model_bits(shapes, spec.fl.bits_per_param)
+
+
+def spec_adapter_bits(spec: ExperimentSpec) -> float:
+    """S (Eq. 15) of one *D2D hop* for a cell — the companion of
+    :func:`spec_model_bits` (which stays the full-model figure).
+
+    The hop payload is the trainable-adapter view when the task has one and
+    ``spec.adapter_hops`` is set, and it crosses the wire int8-packed
+    (8 bits/element + one fp32 scale per row-block) when
+    ``spec.fl.hop_quant == "int8"``; full-params fp32 cells return exactly
+    :func:`spec_model_bits`."""
+    from repro.core.aggregation import model_bits
+    from repro.fl.adapters import packed_bits
+    model = build_task_model(spec.task, spec.dim, spec.num_classes)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if spec.adapter_hops and model.split is not None:
+        _, shapes = model.split(shapes)
+    if spec.fl.hop_quant == "int8":
+        return packed_bits(shapes)
     return model_bits(shapes, spec.fl.bits_per_param)
 
 
@@ -85,6 +136,11 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None,
     """
     train, test, part, loaders = load_experiment_data(spec)
     model = build_task_model(spec.task, spec.dim, spec.num_classes)
+    # The executors train/hop the view's payload tree: the trainable
+    # adapter for split tasks, the full params (identity view — unwrapped
+    # model.init/model.loss, bit-identical traces) otherwise.
+    from repro.fl.adapters import make_adapter_view
+    view = make_adapter_view(model, spec.fl, adapter_hops=spec.adapter_hops)
 
     checkpointer = None
     if checkpoint_dir is not None and spec.fl.checkpoint_every > 0:
@@ -109,14 +165,16 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None,
 
     @jax.jit
     def _eval(params):
-        acc = model.accuracy(params, test.x, test.y)
-        loss = model.loss(params, {"x": test.x, "y": test.y})
+        full = view.merge_fn(params)
+        acc = model.accuracy(full, test.x, test.y)
+        loss = model.loss(full, {"x": test.x, "y": test.y})
         return acc, loss
 
     def eval_fn(params):
         a, l = _eval(params)
         return float(a), float(l)
 
-    return run_federated(model.init, model.loss, batches, part.dsi,
+    return run_federated(view.init_fn, view.loss_fn, batches, part.dsi,
                          part.data_sizes, eval_fn, spec.fl,
-                         plan_cache=plan_cache, checkpointer=checkpointer)
+                         plan_cache=plan_cache, checkpointer=checkpointer,
+                         base_bits=view.base_bits)

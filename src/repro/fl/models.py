@@ -5,6 +5,13 @@ in for CIFAR-10/FMNIST — see DESIGN.md §1): CNN reshapes features to an
 8×8 "image", LSTM consumes them as a length-8 sequence.  All expose
 ``init(key) -> params``, ``loss(params, batch) -> scalar``,
 ``predict(params, x) -> labels``.
+
+The "lm" task extends the zoo past the paper's models: a small pre-norm
+transformer (tied embeddings, causal attention) over token rows from
+``data/synthetic.lm_corpus``, trained on next-token cross-entropy.  Its
+attention/MLP projections carry LoRA factors, and ``split``/``merge``
+expose the frozen-base / trainable-adapter view that the FL executors hop
+instead of the full model (``repro.fl.adapters``).
 """
 from __future__ import annotations
 
@@ -17,7 +24,19 @@ import jax.numpy as jnp
 Array = jax.Array
 Params = Any
 
-__all__ = ["TaskModel", "build_task_model", "TASK_MODELS"]
+__all__ = ["TaskModel", "build_task_model", "TASK_MODELS",
+           "LM_VOCAB", "LM_WIDTH", "LM_FF", "LM_LAYERS", "LM_HEADS",
+           "LM_RANK"]
+
+# The small-LM config: 2-layer/64-wide tied-embedding transformer with
+# rank-2 LoRA adapters — sized so the adapter-int8 hop payload undercuts
+# the full-f32 model by well over the 50x budget gate.
+LM_VOCAB = 128
+LM_WIDTH = 64
+LM_FF = 128
+LM_LAYERS = 2
+LM_HEADS = 2
+LM_RANK = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,11 +45,21 @@ class TaskModel:
     init: Callable[[Array], Params]
     logits: Callable[[Params, Array], Array]
     loss: Callable[[Params, dict], Array]
+    # Frozen-base / trainable-adapter view (repro.fl.adapters): ``split``
+    # maps params -> (base, adapter), ``merge`` inverts it.  ``None`` means
+    # full-params — the view degenerates to the identity.
+    split: Callable[[Params], tuple[Params, Params]] | None = None
+    merge: Callable[[Params, Params], Params] | None = None
+    # Task-specific accuracy (next-token accuracy for "lm"); ``None`` means
+    # argmax-class accuracy from ``logits``.
+    accuracy_fn: Callable[[Params, Array, Array], Array] | None = None
 
     def predict(self, params: Params, x: Array) -> Array:
         return jnp.argmax(self.logits(params, x), axis=-1)
 
     def accuracy(self, params: Params, x: Array, y: Array) -> Array:
+        if self.accuracy_fn is not None:
+            return self.accuracy_fn(params, x, y)
         return jnp.mean((self.predict(params, x) == y).astype(jnp.float32))
 
 
@@ -161,7 +190,81 @@ def build_task_model(name: str, dim: int = 64, num_classes: int = 10,
         return TaskModel(name, init, logits,
                          lambda p, b: _xent(logits(p, b["x"]), b["y"]))
 
+    if name == "lm":
+        v, d, ff = LM_VOCAB, LM_WIDTH, LM_FF
+        nl, nh, r = LM_LAYERS, LM_HEADS, LM_RANK
+        hd = d // nh
+        shapes = (("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)),
+                  ("wo", (d, d)), ("w1", (d, ff)), ("w2", (ff, d)))
+
+        def init(key):
+            ke, kb, ka = jax.random.split(key, 3)
+            base = {"embed": jax.random.normal(ke, (v, d)) * 0.02,
+                    "layers": []}
+            lora = []
+            for i in range(nl):
+                kbs = jax.random.split(jax.random.fold_in(kb, i),
+                                       len(shapes))
+                base["layers"].append(
+                    {n: jax.random.normal(k, s) / jnp.sqrt(s[0])
+                     for k, (n, s) in zip(kbs, shapes)})
+                kas = jax.random.split(jax.random.fold_in(ka, i),
+                                       len(shapes))
+                # b zero-init: the adapter starts as an exact zero delta
+                lora.append(
+                    {n: {"a": jax.random.normal(k, (s[0], r))
+                         / jnp.sqrt(s[0]),
+                         "b": jnp.zeros((r, s[1]))}
+                     for k, (n, s) in zip(kas, shapes)})
+            return {"base": base, "lora": lora}
+
+        def _rms(h):
+            return h * jax.lax.rsqrt(
+                jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
+
+        def _proj(h, bl, lo, n):
+            return h @ bl[n] + (h @ lo[n]["a"]) @ lo[n]["b"]
+
+        def logits(p, x):
+            base, lora = p["base"], p["lora"]
+            tok = x.astype(jnp.int32)
+            b, s = tok.shape
+            h = base["embed"][tok]                               # (B, S, D)
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            for bl, lo in zip(base["layers"], lora):
+                hn = _rms(h)
+                q = _proj(hn, bl, lo, "wq").reshape(b, s, nh, hd)
+                k = _proj(hn, bl, lo, "wk").reshape(b, s, nh, hd)
+                vv = _proj(hn, bl, lo, "wv").reshape(b, s, nh, hd)
+                att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd)
+                att = jax.nn.softmax(
+                    jnp.where(mask[None, None], att, -jnp.inf), axis=-1)
+                o = jnp.einsum("bhqk,bkhd->bqhd", att, vv).reshape(b, s, d)
+                h = h + _proj(o, bl, lo, "wo")
+                h = h + _proj(jax.nn.relu(_proj(_rms(h), bl, lo, "w1")),
+                              bl, lo, "w2")
+            return _rms(h) @ base["embed"].T                     # tied head
+
+        def loss(p, batch):
+            tok = batch["x"].astype(jnp.int32)      # next-token CE; no "y"
+            lg = logits(p, tok[:, :-1])
+            tgt = tok[:, 1:]
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+            return jnp.mean(logz - gold)
+
+        def accuracy_fn(p, x, y):
+            tok = x.astype(jnp.int32)
+            pred = jnp.argmax(logits(p, tok[:, :-1]), axis=-1)
+            return jnp.mean((pred == tok[:, 1:]).astype(jnp.float32))
+
+        return TaskModel(name, init, logits, loss,
+                         split=lambda p: (p["base"], p["lora"]),
+                         merge=lambda base, lora: {"base": base,
+                                                   "lora": lora},
+                         accuracy_fn=accuracy_fn)
+
     raise ValueError(f"unknown task model {name!r}")
 
 
-TASK_MODELS = ("logistic", "svm", "fcn", "lstm", "cnn")
+TASK_MODELS = ("logistic", "svm", "fcn", "lstm", "cnn", "lm")

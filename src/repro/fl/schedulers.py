@@ -61,7 +61,16 @@ class RoundContext:
     model_bits: float
     param_template: object
     plan_cache: PlanCache | None = None
+    # Per-hop D2D payload bits when the wire format differs from fp32
+    # params (int8-packed adapter hops, FLConfig.hop_quant); None charges
+    # model_bits.  Up/downlinks always charge model_bits.
+    hop_bits: float | None = None
     _dist: np.ndarray | None = dataclasses.field(default=None, repr=False)
+
+    def d2d_bits(self) -> float:
+        """Eq.-15 payload size S of one D2D hop under the active wire
+        format (``repro.fl.adapters.packed_bits`` for int8 hops)."""
+        return self.model_bits if self.hop_bits is None else self.hop_bits
 
     def pair_distances(self) -> np.ndarray:
         """(N, N) distance matrix for this round's positions, computed once
@@ -165,7 +174,7 @@ def schedule_feddif(ctx: RoundContext) -> RoundSchedule:
     n, m = cfg.num_clients, cfg.num_models
     compress = cfg.strategy == "feddif_stc"
     hop_bits = (compressed_bits(ctx.param_template, cfg.stc_sparsity)
-                if compress else ctx.model_bits)
+                if compress else ctx.d2d_bits())
 
     state = DiffusionState.init(m, n, ctx.dsi.shape[1])
     init_mask = np.zeros(n, dtype=bool)
@@ -180,7 +189,7 @@ def schedule_feddif(ctx: RoundContext) -> RoundSchedule:
     cache_key = None
     if ctx.plan_cache is not None and cfg.topology_seed is not None:
         cache_key = feddif_cache_key(cfg, ctx.t, ctx.dsi, ctx.data_sizes,
-                                     ctx.model_bits, ctx.planner.auction)
+                                     ctx.d2d_bits(), ctx.planner.auction)
     plan = ctx.planner.plan_communication_round(
         state, ctx.dsi, ctx.data_sizes, ctx.rng, positions=ctx.pos,
         cache=ctx.plan_cache, cache_key=cache_key)
@@ -227,7 +236,7 @@ def schedule_fedswap(ctx: RoundContext) -> RoundSchedule:
             src, dst = int(holder[mi]), int(perm[mi])
             if src == dst:
                 continue
-            wire.append(WireEvent("d2d", ctx.model_bits,
+            wire.append(WireEvent("d2d", ctx.d2d_bits(),
                                   max(float(gamma[src, dst]), GAMMA_FLOOR)))
             holder[mi] = dst
             hops.append((mi, dst))
@@ -284,7 +293,7 @@ def schedule_d2d_random_walk(ctx: RoundContext) -> RoundSchedule:
             if not cand:
                 continue
             dst = int(ctx.rng.choice(cand))
-            wire.append(WireEvent("d2d", ctx.model_bits,
+            wire.append(WireEvent("d2d", ctx.d2d_bits(),
                                   max(float(gamma[src, dst]), GAMMA_FLOOR)))
             holder[mi] = dst
             visited[mi, dst] = True

@@ -59,7 +59,7 @@ from repro.channels.topology import CellTopology
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
 from repro.core.diffusion import PLANNER_MODES, DiffusionPlanner, PlanCache
-from repro.core.schedule import charge_schedule
+from repro.core.schedule import WireEvent, charge_schedule
 from repro.fl.client import make_local_update
 from repro.fl.executors import EXECUTORS, make_executor
 from repro.fl.schedulers import (PROX_STRATEGIES, SCHEDULERS, RoundContext,
@@ -67,10 +67,13 @@ from repro.fl.schedulers import (PROX_STRATEGIES, SCHEDULERS, RoundContext,
 
 Params = Any
 
-__all__ = ["FLConfig", "FLResult", "run_federated", "STRATEGIES"]
+__all__ = ["FLConfig", "FLResult", "run_federated", "STRATEGIES",
+           "HOP_QUANTS"]
 
 STRATEGIES = ("feddif", "fedavg", "fedswap", "stc", "tthf", "gossip",
               "feddif_stc", "fedprox", "feddif_prox", "d2d_random_walk")
+
+HOP_QUANTS = ("none", "int8")
 
 
 @dataclasses.dataclass
@@ -128,6 +131,15 @@ class FLConfig:
     underlay: bool = False           # Appendix C-F (D2D reuses CUE PRBs)
     checkpoint_every: int = 0        # durable round-state cadence R; 0 = off
                                      # (see repro.fl.resume.RoundCheckpointer)
+    hop_quant: str = "none"          # D2D hop payload wire format: "none"
+                                     # (fp32) | "int8" (per-row-block absmax
+                                     # pack, kernels/quant.py).  Applies to
+                                     # PermuteOp diffusion hops (feddif /
+                                     # fedswap / d2d_random_walk); MixOp-
+                                     # based exchanges (tthf, gossip) and
+                                     # up/downlinks stay fp32.  Composes
+                                     # numerically with feddif_stc, whose
+                                     # ledger keeps the STC accounting.
 
 
 @dataclasses.dataclass
@@ -172,7 +184,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                   eval_fn: Callable[[Params], tuple[float, float]],
                   cfg: FLConfig,
                   plan_cache: PlanCache | None = None,
-                  checkpointer=None) -> FLResult:
+                  checkpointer=None, base_bits: float = 0.0) -> FLResult:
     """Run one FL experiment.
 
     Args:
@@ -191,10 +203,14 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         When set, full round state is serialized every
         ``checkpointer.every`` rounds and, if a readable checkpoint exists
         in its directory, the loop resumes from it bit-identically.
+      base_bits: serialized size of the frozen base under an adapter view
+        (``repro.fl.adapters``).  Charged once as a round-0 downlink
+        broadcast; 0.0 (full-params runs) charges nothing.
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
     assert cfg.executor in EXECUTORS, cfg.executor
     assert cfg.planner in PLANNER_MODES, cfg.planner
+    assert cfg.hop_quant in HOP_QUANTS, cfg.hop_quant
     if cfg.num_models > cfg.num_clients:
         # The paper trains M ≤ N models (one PUE trains one model per round,
         # constraint 18d); the slot-per-client executors require it too.
@@ -225,7 +241,15 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
 
     global_params = init_fn(key)
     model_bits = agg.model_bits(global_params, cfg.bits_per_param)
-    auction.model_bits = model_bits
+    # What one D2D hop actually moves: the int8-packed wire size under
+    # hop_quant, the fp32 payload otherwise.  The auction prices hops
+    # (Eq. 15) at this figure; up/downlinks keep charging model_bits.
+    if cfg.hop_quant == "int8":
+        from repro.fl.adapters import packed_bits
+        hop_bits = packed_bits(global_params)
+    else:
+        hop_bits = model_bits
+    auction.model_bits = hop_bits
 
     acc_hist, loss_hist, dif_hist, iid_hist = [], [], [], []
     round_wall: list[float] = []
@@ -262,8 +286,14 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                            topology=topology, channel=channel,
                            planner=planner, model_bits=model_bits,
                            param_template=global_params,
-                           plan_cache=plan_cache)
+                           plan_cache=plan_cache, hop_bits=hop_bits)
         schedule = SCHEDULERS[cfg.strategy](ctx)
+        if t == 0 and base_bits > 0.0:
+            # One-time frozen-base broadcast (adapter view): every round-t
+            # state derives from base + hopped adapter, so the base ships
+            # once on the round-0 downlink, strategy-independent.
+            schedule.wire.append(WireEvent("downlink", float(base_bits),
+                                           float(np.median(up_gamma)), n))
         schedule = apply_round_churn(ctx, schedule)
         charge_schedule(ledger, schedule)
         plan_s = time.time() - t_plan

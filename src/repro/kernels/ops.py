@@ -29,12 +29,13 @@ from repro.kernels.diffusion import (dol_bid_scores_pallas,
                                      mix_aggregate_pallas, stack_ravel,
                                      stack_unravel, stc_rows_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant import quant_pack_pallas, quant_unpack_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.stc_compress import stc_apply_pallas, stc_reduce_pallas
 
 __all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan",
            "mix_aggregate", "mix_aggregate_tree", "stc_topk",
-           "dol_bid_scores"]
+           "dol_bid_scores", "quant_pack", "quant_unpack"]
 
 _IMPLS = ("pallas", "pallas_interpret", "xla", "ref")
 
@@ -136,6 +137,28 @@ def stc_topk(x, ref_row, mask, sparsity: float = 0.01, *,
         return ref.stc_rows_ref(x, ref_row, mask, sparsity)
     interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
     return stc_rows_pallas(x, ref_row, mask, sparsity, interpret=interpret)
+
+
+def quant_pack(x, *, implementation: str = "auto"):
+    """Per-row int8 absmax pack — the adapter hop wire format.  x (R, B)
+    fp32 → (q (R, B) int8, scale (R,) fp32), ``scale = max(absmax,
+    1e-12)/127`` per row.  Rows here are the QUANT_BLOCK-element row-blocks
+    of a flattened adapter (``fl/adapters.pack_rows``)."""
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.quant_pack_ref(x)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return quant_pack_pallas(x, interpret=interpret)
+
+
+def quant_unpack(q, scale, *, implementation: str = "auto") -> jax.Array:
+    """Inverse of :func:`quant_pack`: (q (R, B) int8, scale (R,)) → (R, B)
+    fp32 dequantized payload at the hop destination."""
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.quant_unpack_ref(q, scale)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return quant_unpack_pallas(q, scale, interpret=interpret)
 
 
 def dol_bid_scores(dol, chain_size, dsi, data_size, *,

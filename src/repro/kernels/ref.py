@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["flash_attention_ref", "stc_compress_ref", "ssm_scan_ref",
-           "mix_aggregate_ref", "stc_rows_ref", "dol_bid_scores_ref"]
+           "mix_aggregate_ref", "stc_rows_ref", "dol_bid_scores_ref",
+           "quant_pack_ref", "quant_unpack_ref"]
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -69,6 +70,25 @@ def stc_rows_ref(x: jax.Array, ref_row: jax.Array, mask: jax.Array,
         lambda row: ref_row + stc_compress_ref(
             row.astype(jnp.float32) - ref_row, sparsity))(x)
     return jnp.where(mask.reshape(-1, 1), comp.astype(x.dtype), x)
+
+
+def quant_pack_ref(x: jax.Array):
+    """Per-row int8 absmax pack — the adapter hop wire format.  x (R, B)
+    fp32 → (q (R, B) int8, scale (R,) fp32) with ``scale = max(absmax,
+    1e-12)/127``; all-zero rows hit the floor and quantize to exact zeros."""
+    x = x.astype(jnp.float32)
+    # reciprocal multiply, matching kernels/quant.py bit for bit (XLA does
+    # not lower /127.0 identically on every path)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1),
+                        1e-12) * jnp.float32(1 / 127)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127.0, 127.0).astype(
+        jnp.int8)
+    return q, scale
+
+
+def quant_unpack_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """(q (R, B) int8, scale (R,)) → (R, B) fp32 dequantized payload."""
+    return q.astype(jnp.float32) * scale[:, None].astype(jnp.float32)
 
 
 def dol_bid_scores_ref(dol: jax.Array, chain_size: jax.Array,
