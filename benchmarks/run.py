@@ -22,6 +22,8 @@ Paper artifacts covered:
   fig6_tasks            ML-task sweep (logistic/svm/fcn/lstm/cnn)
   table1_accuracy       FedDif vs baselines, accuracy after T rounds
   table2_comm_eff       sub-frames / transmitted models to target accuracy
+  fig_async_sweep       sync vs buffered-async engines (fig_async registry)
+  async_throughput      buffered-async vs barrier: virtual time-to-target
   kernels_microbench    flash-attn / stc / ssm-scan op timings (XLA path)
   roofline_summary      aggregates benchmarks/results dry-run JSONs
 """
@@ -39,11 +41,14 @@ sys.path.insert(0, "src")
 
 EXECUTOR = "host"      # set by --executor; stamped on every registry sweep
 PLANNER = "host"       # set by --planner; stamped on every registry sweep
+ENGINE = None          # set by --engine; an EngineSpec preset name that wins
+                       # over EXECUTOR/PLANNER on every cell when given
 
 
 def _fl(strategy, alpha=1.0, rounds=6, clients=8, task="fcn", **kw):
     from repro.fl import ExperimentSpec, FLConfig, run_experiment
     kw.setdefault("executor", EXECUTOR)
+    kw.setdefault("engine", ENGINE)
     # the jax planner does not model underlay CUE interference
     kw.setdefault("planner", "host" if kw.get("underlay") else PLANNER)
     spec = ExperimentSpec(
@@ -79,7 +84,8 @@ def _run_registry_sweep(bench_name: str, sweep_name: str, full: bool):
     """Drive one registry sweep; print per-cell CSV lines; write artifact."""
     from repro.experiments import run_sweep
     art = run_sweep(sweep_name, smoke=not full, seeds=(0,),
-                    executor=EXECUTOR, planner=PLANNER)
+                    executor=EXECUTOR, planner=PLANNER,
+                    engine_preset=ENGINE)
     for c in art["cells"]:
         curve = np.mean(np.asarray(c["accuracy"]), axis=0)
         print(f"{bench_name},{c['label']},engine={c['engine']},"
@@ -106,6 +112,97 @@ def fig5_qos_sweep(full: bool):
 
 def fig6_tasks(full: bool):
     _run_registry_sweep("fig6_tasks", "fig6_tasks", full)
+
+
+def fig_async_sweep(full: bool):
+    """fig_async registry sweep: buffered-async vs barrier-on-the-event-
+    queue (both arms share the straggler/link-delay model and 5% churn)."""
+    _run_registry_sweep("fig_async_sweep", "fig_async", full)
+
+
+def async_throughput(full: bool):
+    """Buffered-async round plane throughput (the PR-9 tentpole headline).
+
+    Two arms of the same event-driven executor on the same cell — fedavg at
+    fleet scale under lognormal compute stragglers and channel-drawn D2D/
+    uplink link delays (the ``async`` / ``async_barrier`` EngineSpec
+    presets):
+
+    * ``async_barrier``: K = all — every server tick waits for the slowest
+      arrival, i.e. the classic synchronous round on the virtual clock;
+    * ``async``: FedBuff-style buffering — aggregate the first
+      K = 0.5·M arrivals per tick with the staleness discount
+      ``alpha/(1+s)^beta``, park the rest in the buffer.
+
+    Both arms replay identical schedules, so their Eq.-15 ledgers are
+    asserted bit-identical — the *only* difference is when the virtual
+    clock advances.  Headline numbers: ``speedup_time_to_target``
+    (virtual seconds to the shared target accuracy, barrier/buffered;
+    budget-gated ≥ 1.5x at N ≥ 256) and arrivals aggregated per virtual
+    second.  Emits ``BENCH_async_throughput.json``."""
+    from repro.experiments.artifacts import write_bench_json
+    from repro.fl import ExperimentSpec, FLConfig, run_experiment
+
+    n = 256 if full else 64
+    rounds = 6 if full else 4
+    samples = 5 * n          # comm/straggler-dominated regime: tiny shards
+
+    def run_arm(preset):
+        spec = ExperimentSpec(
+            task="fcn", alpha=0.5, num_samples=samples,
+            fl=FLConfig(strategy="fedavg", rounds=rounds, num_clients=n,
+                        num_models=n, seed=0, topology_seed=0,
+                        eval_every=1, engine=preset))
+        t0 = time.time()
+        r = run_experiment(spec)
+        dt = time.time() - t0
+        h = r.history
+        vfinal = float(h.virtual_s[-1])
+        arrivals = int(np.sum(h.arrivals))
+        print(f"async_throughput,engine={preset},clients={n},"
+              f"rounds={rounds},sec={dt:.1f},virtual_s={vfinal:.2f},"
+              f"arrivals={arrivals},"
+              f"arrivals_per_vs={arrivals / max(vfinal, 1e-9):.2f},"
+              f"acc={max(h.accuracy):.4f},"
+              f"mean_staleness={np.mean(h.staleness):.2f},"
+              f"ticks={len(h.virtual_s)}", flush=True)
+        return r, {"engine": preset, "wall_clock_s": dt,
+                   "virtual_s": vfinal, "arrivals": arrivals,
+                   "arrivals_per_vs": arrivals / max(vfinal, 1e-9),
+                   "peak_acc": float(max(h.accuracy)),
+                   "mean_staleness": float(np.mean(h.staleness)),
+                   "ticks": len(h.virtual_s)}
+
+    r_barrier, arm_barrier = run_arm("async_barrier")
+    r_async, arm_async = run_arm("async")
+    ledger_parity = (r_barrier.ledger.as_dict() == r_async.ledger.as_dict())
+    assert ledger_parity, \
+        "both arms replay identical schedules; Eq.-15 ledgers must agree"
+
+    # Shared target both arms reach: just under the weaker arm's peak.
+    target = 0.98 * min(arm_barrier["peak_acc"], arm_async["peak_acc"])
+    tta_barrier = r_barrier.time_to_accuracy(target)
+    tta_async = r_async.time_to_accuracy(target)
+    speedup = float(tta_barrier) / max(float(tta_async), 1e-9)
+    record = {
+        "clients": n, "rounds": rounds, "num_samples": samples,
+        "arms": {"async_barrier": arm_barrier, "async": arm_async},
+        "ledger_parity": ledger_parity,
+        "target_acc": target,
+        "time_to_target_barrier_vs": tta_barrier,
+        "time_to_target_async_vs": tta_async,
+        "speedup_time_to_target": speedup,
+        "throughput_gain": (arm_async["arrivals_per_vs"]
+                            / max(arm_barrier["arrivals_per_vs"], 1e-9)),
+        "max_wall_clock_s": max(arm_barrier["wall_clock_s"],
+                                arm_async["wall_clock_s"]),
+    }
+    write_bench_json("async_throughput", record)
+    print(f"async_throughput,clients={n},target_acc={target:.4f},"
+          f"tta_barrier_vs={tta_barrier:.2f},tta_async_vs={tta_async:.2f},"
+          f"speedup_time_to_target={speedup:.2f}x,"
+          f"throughput_gain={record['throughput_gain']:.2f}x,"
+          f"ledger_parity={ledger_parity}", flush=True)
 
 
 def table1_accuracy(full: bool):
@@ -799,7 +896,8 @@ def appendix_scenarios(full: bool):
 
 
 BENCHES = [fig2_convergence, fig3_alpha_sweep, fig4_epsilon_sweep,
-           fig5_qos_sweep, fig6_tasks, table1_accuracy, table2_comm_eff,
+           fig5_qos_sweep, fig6_tasks, fig_async_sweep, async_throughput,
+           table1_accuracy, table2_comm_eff,
            planner_speedup, executor_speedup, fleet_scaling, lm_hops,
            kernel_data_plane, appendix_scenarios, kernels_microbench,
            roofline_summary]
@@ -911,7 +1009,7 @@ def _force_cpu_mesh_for(bench_names: list) -> None:
 
 
 def main() -> None:
-    global EXECUTOR, PLANNER
+    global EXECUTOR, PLANNER, ENGINE
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
@@ -922,6 +1020,12 @@ def main() -> None:
     ap.add_argument("--planner", choices=["host", "jax"], default="host",
                     help="FL control plane for the figure/table benches "
                          "(planner_speedup always compares both)")
+    ap.add_argument("--engine", default=None,
+                    help="EngineSpec preset stamped on every figure/table "
+                         "cell (host/fleet/sharded/auto/async/async_barrier)"
+                         "; wins over --executor/--planner when given "
+                         "(async_throughput always compares async vs "
+                         "async_barrier)")
     ap.add_argument("--check-budgets", action="store_true",
                     help="run no benches; gate existing BENCH artifacts "
                          "against benchmarks/budgets.json and exit nonzero "
@@ -931,9 +1035,15 @@ def main() -> None:
         raise SystemExit(check_budgets())
     EXECUTOR = args.executor
     PLANNER = args.planner
+    ENGINE = args.engine
     selected = [b.__name__ for b in BENCHES
                 if not args.only or args.only in b.__name__]
-    _force_cpu_mesh_for(selected)
+    _force_cpu_mesh_for(selected)   # must precede any repro/jax import
+    if args.engine is not None:
+        from repro.fl.engine import ENGINE_PRESETS
+        if args.engine not in ENGINE_PRESETS:
+            raise SystemExit(f"--engine must be one of "
+                             f"{sorted(ENGINE_PRESETS)}")
     t0 = time.time()
     for bench in BENCHES:
         if bench.__name__ not in selected:

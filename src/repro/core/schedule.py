@@ -35,7 +35,8 @@ import dataclasses
 import numpy as np
 
 __all__ = ["WireEvent", "TrainOp", "PermuteOp", "MixOp", "RoundSchedule",
-           "complete_round_permutation", "charge_schedule", "apply_churn"]
+           "complete_round_permutation", "charge_schedule", "apply_churn",
+           "ArrivalModel", "annotate_arrivals"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +219,98 @@ def apply_churn(schedule: RoundSchedule, drop: np.ndarray) -> RoundSchedule:
         else:
             ops2.append(op)
     return dataclasses.replace(schedule, ops=ops2, agg=agg2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalModel:
+    """Per-slot timing world of one round — the async plane's delay inputs.
+
+    All entries are seconds.  ``train_s[c]`` is the duration of one local
+    training session at slot ``c`` (data rows x per-row compute / client
+    speed, with the round's lognormal jitter already applied);
+    ``hop_s[s, d]`` is the D2D link time to move one hop payload from slot
+    ``s`` to slot ``d`` (payload bits / (gamma_{sd} * PRB_HZ), from the jnp
+    channel twins); ``uplink_s[c]`` is slot ``c``'s uplink time for its
+    aggregation contribution.  A zero model (``ArrivalModel.zeros``) makes
+    every arrival instantaneous — the sync-degenerate configuration.
+    """
+    train_s: np.ndarray     # (C,)
+    hop_s: np.ndarray       # (C, C)
+    uplink_s: np.ndarray    # (C,)
+
+    @classmethod
+    def zeros(cls, num_slots: int) -> "ArrivalModel":
+        return cls(train_s=np.zeros(num_slots),
+                   hop_s=np.zeros((num_slots, num_slots)),
+                   uplink_s=np.zeros(num_slots))
+
+
+def annotate_arrivals(schedule: RoundSchedule, model: ArrivalModel,
+                      hop_deadline_s: float | None = None
+                      ) -> tuple[RoundSchedule, np.ndarray, int]:
+    """Propagate per-slot ready times through a schedule's ops.
+
+    Replays the op list against :class:`ArrivalModel`, tracking when each
+    slot's payload is *ready*:
+
+    * ``TrainOp`` adds ``train_s`` at every masked slot;
+    * ``PermuteOp`` moves readiness along the hop (``ready[src] +
+      hop_s[src, dst]`` for genuine moves; parked identity moves are free,
+      matching the ledger, which never charges them), then adds the
+      destination's training time;
+    * ``MixOp`` is a group barrier: members synchronize at the group max
+      plus the slowest pairwise exchange.
+
+    When ``hop_deadline_s`` is set, hops whose payload would arrive at the
+    carrier later than the deadline are **parked**: the destination keeps
+    the (late) model but skips its training session — its ``train_mask``
+    bit clears, exactly the :func:`apply_churn` semantics — while the wire
+    events stay untouched, so the Eq.-15 ledger still charges the airtime
+    the transmission consumed.
+
+    Returns ``(schedule', arrival_s, parked)`` where ``arrival_s[c]`` is
+    slot ``c``'s aggregation-contribution arrival time at the server
+    (ready + uplink) relative to the round's dispatch, and ``parked``
+    counts the cleared hop-training bits.  With a zero model and no
+    deadline the schedule passes through with identical op content.
+    """
+    c = schedule.num_slots
+    ready = np.zeros(c, np.float64)
+    idx = np.arange(c)
+    parked = 0
+    ops2: list = []
+    for op in schedule.ops:
+        if isinstance(op, TrainOp):
+            ready = ready + np.where(op.train_mask, model.train_s, 0.0)
+            ops2.append(op)
+        elif isinstance(op, PermuteOp):
+            src = np.asarray(op.src_of_dst, np.int64)
+            moved = src != idx
+            incoming = ready[src] + np.where(moved, model.hop_s[src, idx],
+                                             0.0)
+            mask = np.asarray(op.train_mask, bool)
+            if hop_deadline_s is not None:
+                late = incoming > float(hop_deadline_s)
+                parked += int(np.count_nonzero(late & mask))
+                mask = mask & ~late
+                ops2.append(dataclasses.replace(op, train_mask=mask))
+            else:
+                ops2.append(op)
+            ready = incoming + np.where(mask, model.train_s, 0.0)
+        elif isinstance(op, MixOp):
+            for members, _ in op.groups:
+                mem = list(members)
+                exchange = max((float(model.hop_s[i, j])
+                                for i in mem for j in mem if i != j),
+                               default=0.0)
+                ready[mem] = float(ready[mem].max()) + exchange
+            ops2.append(op)
+        else:
+            raise TypeError(f"unknown op {type(op).__name__}")
+    arrival = ready + model.uplink_s
+    if parked == 0:
+        return schedule, arrival, 0
+    return dataclasses.replace(schedule, ops=ops2), arrival, parked
 
 
 def charge_schedule(ledger, schedule: RoundSchedule) -> None:

@@ -41,9 +41,11 @@ from repro.experiments.registry import SweepCell, expand_sweep, get_sweep
 from repro.experiments.replicate import (SEED_VMAP_STRATEGIES,
                                          run_replicates_loop,
                                          run_replicates_vmapped)
+from repro.fl.engine import SHARDED_CROSSOVER_N, resolve_engine
 from repro.fl.server import _uplink_gamma
 
-__all__ = ["run_cell", "run_sweep", "prepopulate_plan_cache"]
+__all__ = ["run_cell", "run_sweep", "prepopulate_plan_cache",
+           "SHARDED_CROSSOVER_N"]
 
 _FEDDIF_STRATEGIES = ("feddif", "feddif_stc", "feddif_prox")
 
@@ -134,27 +136,35 @@ def prepopulate_plan_cache(cells: Sequence[SweepCell], cache: PlanCache
     return {"planned": planned, "skipped": skipped, "batches": len(groups)}
 
 
-# Measured N-crossover of the sharded data plane (BENCH_fleet_scaling):
-# below this client count the mesh dispatch + padding overheads outweigh
-# device-level client parallelism and the single-device fleet plane is
-# faster, so engine="auto" downgrades sharded cells under the crossover.
-SHARDED_CROSSOVER_N = 64
+# The measured fleet/sharded N-crossover now lives in repro.fl.engine
+# (SHARDED_CROSSOVER_N, re-exported above for back-compat); the downgrade
+# heuristic formerly in _pick_executor is EngineSpec.auto().
 
 
 def _pick_executor(cell: SweepCell, engine: str) -> SweepCell:
+    """Crossover downgrade, delegated to :meth:`EngineSpec.auto`.
+
+    ``resolve_engine`` maps the cell's config (typed ``fl.engine`` or the
+    legacy string kwargs) onto a spec and applies the sharded->fleet
+    downgrade below :data:`SHARDED_CROSSOVER_N`; the resolved mode is
+    stamped back onto the cell so replication engines see it.
+    """
     cfg = cell.spec.fl
-    if (engine == "auto" and cfg.executor == "sharded"
-            and cfg.num_clients < SHARDED_CROSSOVER_N):
-        print(f"orchestrator,{cell.label},executor=fleet,"
-              f"reason=N={cfg.num_clients}<crossover={SHARDED_CROSSOVER_N}",
-              flush=True)
-        return cell.with_fl(executor="fleet")
+    if engine == "auto" and cfg.engine is None and cfg.executor == "sharded":
+        mode = resolve_engine(cfg).auto(cfg.num_clients).mode
+        if mode != cfg.executor:
+            print(f"orchestrator,{cell.label},executor={mode},"
+                  f"reason=N={cfg.num_clients}<crossover="
+                  f"{SHARDED_CROSSOVER_N}", flush=True)
+            return cell.with_fl(executor=mode)
     return cell
 
 
 def _pick_engine(cell: SweepCell, engine: str) -> str:
-    if cell.spec.fl.executor in ("fleet", "sharded"):
-        # These executors already vmap/shard the *client* axis; replicate
+    mode = resolve_engine(cell.spec.fl).mode
+    if mode in ("fleet", "sharded", "async"):
+        # fleet/sharded already vmap/shard the *client* axis, and the async
+        # plane's event queue is inherently sequential over ticks; replicate
         # seeds run on the loop engine (the seed_vmap engine is its own
         # host-side seed-stacked data plane and would bypass the executor
         # seam).
@@ -217,7 +227,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
         "value": cell.value,
         "strategy": cell.strategy,
         "engine": chosen,
-        "executor": cell.spec.fl.executor,
+        "executor": resolve_engine(cell.spec.fl).mode,
         "plan_cache": cache_stats,
         "seeds": [int(s) for s in seeds],
         "accuracy": curves,
@@ -240,6 +250,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
 def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
               out_dir: str | None = "auto", engine: str = "auto",
               executor: str = "host", planner: str = "host",
+              engine_preset: str | None = None,
               plan_cache: PlanCache | None = None,
               checkpoint_every: int = 0, resume: bool = False,
               state_dir: str | None = None,
@@ -264,6 +275,11 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
         the whole sweep's diffusion plans are computed up front in batched
         device calls (:func:`prepopulate_plan_cache`); the per-cell runs
         then replay them from the shared cache.
+      engine_preset: an :data:`~repro.fl.engine.ENGINE_PRESETS` name (e.g.
+        ``"async"``) stamped as ``FLConfig.engine`` on every cell.  The
+        typed spec wins over the legacy ``executor`` string — this is how
+        ``launch/sweep --engine async`` selects the buffered-async plane
+        sweep-wide.
       plan_cache: share one across sweeps if desired; default is a fresh
         cache per sweep (still shared across all cells *and* seeds).
       checkpoint_every: round-checkpoint cadence R.  Any of
@@ -287,6 +303,8 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
     defn = get_sweep(name)
     cells = expand_sweep(name, smoke=smoke, executor=executor,
                          planner=planner, **spec_overrides)
+    if engine_preset is not None:
+        cells = [c.with_fl(engine=engine_preset) for c in cells]
     cache = plan_cache if plan_cache is not None else PlanCache()
     durable = checkpoint_every > 0 or resume or state_dir is not None
 
@@ -298,6 +316,7 @@ def run_sweep(name: str, smoke: bool = True, seeds: Sequence[int] = (0,),
         config = {"sweep": name, "smoke": smoke,
                   "seeds": [int(s) for s in seeds], "executor": executor,
                   "planner": planner, "engine": engine,
+                  "engine_preset": engine_preset,
                   "checkpoint_every": int(checkpoint_every),
                   "spec_overrides": spec_overrides}
         manifest = durability.SweepManifest.open(

@@ -19,6 +19,7 @@ name                paper artifact           axis
 ``fig6_tasks``      Fig. 6 / Table I         ML task (logistic…cnn)
 ``table2_strategies``  Table II              strategy (FedAvg…FedDif)
 ``fig7_scaling``    scaling (beyond paper)   client population N (with churn)
+``fig_async``       async (beyond paper)     engine preset (sync vs buffered)
 ==================  =======================  ==================================
 
 Consumers must not hand-roll their own grids: ``benchmarks/run.py`` and the
@@ -30,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+from repro.fl.engine import ENGINE_PRESETS
 from repro.fl.experiment import ExperimentSpec
 from repro.fl.models import TASK_MODELS
 from repro.fl.server import FLConfig, STRATEGIES
@@ -45,6 +47,7 @@ AXIS_TARGETS = {
     "task": ("spec", "task"),
     "strategy": ("fl", "strategy"),
     "num_clients": ("fl", "num_clients"),   # num_models tracks it (M = N)
+    "engine": ("fl", "engine"),             # EngineSpec preset name
 }
 
 
@@ -164,6 +167,9 @@ class SweepDef:
         if self.axis == "task":
             for v in self.values:
                 assert v in TASK_MODELS, v
+        if self.axis == "engine":
+            for v in self.values:
+                assert v in ENGINE_PRESETS, v
 
 
 REGISTRY: dict[str, SweepDef] = {}
@@ -280,6 +286,27 @@ register(SweepDef(
     smoke_num_samples=768,
     spec_overrides={"task": "lm", "dim": 32},
     fl_overrides={"hop_quant": "int8", "max_diffusion_rounds": 4},
+))
+
+register(SweepDef(
+    name="fig_async",
+    figure="Async rounds (beyond paper)",
+    axis="engine",
+    description="Buffered-async (FedBuff-style) round plane vs the same "
+                "event queue with a full barrier (async_barrier), under "
+                "lognormal compute stragglers, channel-drawn link delays "
+                "and 5% per-round churn: accuracy vs the virtual clock and "
+                "arrival throughput.  Both arms share the delay model, so "
+                "the gap isolates what buffering K=frac·M arrivals per "
+                "server tick buys.",
+    values=("async_barrier", "async"),
+    smoke_values=("async_barrier", "async"),
+    strategies=("fedavg", "d2d_random_walk"),
+    rounds=10,
+    smoke_rounds=2,
+    num_clients=16,
+    smoke_num_clients=4,
+    fl_overrides={"churn_rate": 0.05, "max_diffusion_rounds": 4},
 ))
 
 register(SweepDef(

@@ -223,7 +223,7 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     # ---- unstack into one FLResult per seed -----------------------------
     results = []
     for si, s in enumerate(seeds):
-        results.append(FLResult(
+        results.append(FLResult.from_histories(
             accuracy=[float(a[si]) for a in acc_hist],
             loss=[float(l[si]) for l in loss_hist],
             ledger=copy.deepcopy(ledger),

@@ -4,6 +4,9 @@ from repro.fl.compression import stc_compress, compressed_bits
 from repro.fl.adapters import AdapterView, make_adapter_view, packed_bits
 from repro.fl.server import (FLConfig, FLResult, run_federated, STRATEGIES,
                              HOP_QUANTS)
+from repro.fl.engine import (AsyncSpec, EngineSpec, ENGINE_PRESETS,
+                             RunHistory, RunResult, resolve_engine)
+from repro.fl.population import Population, CohortDraw
 from repro.fl.schedulers import SCHEDULERS, RoundContext
 from repro.fl.executors import (EXECUTORS, FleetExecutor, HostExecutor,
                                 ShardedFleetExecutor)

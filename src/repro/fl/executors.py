@@ -146,8 +146,12 @@ class HostExecutor:
         """Executor-native placement of a captured slot tree."""
         return saved
 
-    def run_round(self, sched: RoundSchedule, global_params: Params,
-                  slots: list | None) -> tuple[Params, list | None]:
+    def run_ops(self, sched: RoundSchedule, global_params: Params,
+                slots: list | None) -> list:
+        """Replay the schedule's op list; return the post-op slot state.
+
+        The first half of :meth:`run_round` — the buffered-async plane runs
+        it per round, then defers :meth:`aggregate` to arrival order."""
         c_slots = sched.num_slots
         if not sched.persistent or slots is None:
             slots = [copy.deepcopy(global_params) for _ in range(c_slots)]
@@ -176,13 +180,26 @@ class HostExecutor:
                         slots[i] = avg
             else:
                 raise TypeError(f"unknown op {type(op).__name__}")
+        return slots
+
+    def slot_state(self, slots: list, slot: int) -> Params:
+        """The post-op payload of one slot (host: its pytree)."""
+        return slots[slot]
+
+    def aggregate(self, sched: RoundSchedule, slots: list,
+                  ref: Params) -> Params:
+        """Eq. (11) over the schedule's ``agg`` entries, in entry order."""
         weights = [w for _, w in sched.agg]
         if sched.agg_mode == "stc_delta":
             deltas = [stc_compress(_tree_sub(slots[s], ref),
                                    sched.stc_sparsity) for s, _ in sched.agg]
-            new_global = _tree_add(ref, agg.fedavg(deltas, weights))
-        else:
-            new_global = agg.fedavg([slots[s] for s, _ in sched.agg], weights)
+            return _tree_add(ref, agg.fedavg(deltas, weights))
+        return agg.fedavg([slots[s] for s, _ in sched.agg], weights)
+
+    def run_round(self, sched: RoundSchedule, global_params: Params,
+                  slots: list | None) -> tuple[Params, list | None]:
+        slots = self.run_ops(sched, global_params, slots)
+        new_global = self.aggregate(sched, slots, global_params)
         return new_global, (slots if sched.persistent else None)
 
 
@@ -332,8 +349,10 @@ class FleetExecutor:
 
     # ------------------------------------------------------------------ round
 
-    def run_round(self, sched: RoundSchedule, global_params: Params,
-                  slots: Params | None) -> tuple[Params, Params | None]:
+    def run_ops(self, sched: RoundSchedule, global_params: Params,
+                slots: Params | None) -> Params:
+        """Replay the op list on the client-stacked pytree (first half of
+        :meth:`run_round` — see :meth:`HostExecutor.run_ops`)."""
         c_slots = sched.num_slots
         if sched.persistent and slots is not None:
             params = slots
@@ -358,6 +377,14 @@ class FleetExecutor:
                 params = self._timed("mix", self._mix, params, op, c_slots)
             else:
                 raise TypeError(f"unknown op {type(op).__name__}")
+        return params
+
+    def slot_state(self, params: Params, slot: int) -> Params:
+        """The post-op payload of one slot (fleet: its stacked-axis row)."""
+        return jax.tree.map(lambda x: x[slot], params)
+
+    def aggregate(self, sched: RoundSchedule, params: Params,
+                  ref: Params) -> Params:
         wvec = sched.slot_weights()
         w = jnp.asarray((wvec / wvec.sum()).astype(np.float32))
         if sched.agg_mode == "stc_delta":
@@ -365,7 +392,12 @@ class FleetExecutor:
                                   params, ref, wvec > 0, sched.stc_sparsity)
         else:
             payload = params
-        new_global = self._timed("mix", self._aggregate, payload, w)
+        return self._timed("mix", self._aggregate, payload, w)
+
+    def run_round(self, sched: RoundSchedule, global_params: Params,
+                  slots: Params | None) -> tuple[Params, Params | None]:
+        params = self.run_ops(sched, global_params, slots)
+        new_global = self.aggregate(sched, params, global_params)
         return new_global, (params if sched.persistent else None)
 
 

@@ -1,0 +1,90 @@
+"""Client population sampling — cohorts drawn from 10^5–10^6 simulated users.
+
+The sync planes treat ``FLConfig.num_clients`` as the *world* size: every
+client exists, trains, and aggregates each round.  Production cross-device
+FL (and the paper's 6G setting) is the opposite regime — a huge population
+of intermittently-available devices, of which each round only sees a small
+cohort.  :class:`Population` models that front end for the buffered-async
+engine (``AsyncSpec.population > 0``):
+
+* Each of ``size`` users carries a **persistent** availability weight
+  (Beta(``avail_alpha``, ``avail_beta``)) and a persistent lognormal
+  compute speed (heterogeneous hardware, ``speed_sigma``), drawn once from
+  a ``[seed, _POP_STREAM]``-keyed stream at construction.
+* :meth:`sample_cohort` draws tick ``t``'s cohort of ``k`` users
+  *without replacement*, availability-weighted, via the
+  Efraimidis–Spirakis exponential-key trick — one vectorized pass over the
+  population, deterministic in ``(seed, t)`` alone (same stateless
+  ``default_rng([seed, t, tag])`` idiom as the churn stream), so resumed
+  runs redraw identical cohorts with no stored RNG position.
+* A user's *data shard* is ``user % num_shards``: the Dirichlet partition
+  stays the world of distinct data distributions, and the population maps
+  many users onto it (users sharing a shard are devices holding similarly
+  distributed data).  ``num_clients`` thereby becomes cohort size, not
+  world size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Population", "CohortDraw"]
+
+# Stream tags keeping the population draws out of every other [seed, t]
+# consumer's stream (churn uses 0xC4 — see repro.fl.schedulers).
+_POP_STREAM = 0x9E
+_COHORT_STREAM = 0xA7
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortDraw:
+    """One tick's cohort: global user ids, their data shards and speeds."""
+    t: int
+    users: np.ndarray       # (k,) int64 — population indices
+    shards: np.ndarray      # (k,) int64 — data-partition shard per user
+    speed: np.ndarray       # (k,) float64 — persistent compute speed ~ 1.0
+
+
+class Population:
+    """A fixed simulated user population with heterogeneous availability."""
+
+    def __init__(self, size: int, num_shards: int, seed: int = 0,
+                 avail_alpha: float = 2.0, avail_beta: float = 2.0,
+                 speed_sigma: float = 0.5):
+        assert size >= num_shards >= 1, (size, num_shards)
+        self.size = int(size)
+        self.num_shards = int(num_shards)
+        self.seed = int(seed)
+        rng = np.random.default_rng([self.seed, _POP_STREAM])
+        # Persistent per-user traits: availability in (0, 1] (the sampling
+        # weight) and a mean-1 lognormal compute speed.
+        self.availability = np.maximum(
+            rng.beta(float(avail_alpha), float(avail_beta), self.size),
+            1e-9)
+        z = rng.standard_normal(self.size)
+        s = float(speed_sigma)
+        self.speed = np.exp(s * z - 0.5 * s * s)
+
+    def shard_of(self, users: np.ndarray) -> np.ndarray:
+        return np.asarray(users, np.int64) % self.num_shards
+
+    def sample_cohort(self, t: int, k: int) -> CohortDraw:
+        """Draw tick ``t``'s availability-weighted cohort of ``k`` users.
+
+        Weighted sampling without replacement (Efraimidis–Spirakis): each
+        user draws an exponential key ``E / w`` and the ``k`` smallest keys
+        win — one vectorized O(size) pass, exactly reproducible from
+        ``(seed, t)``.
+        """
+        assert 1 <= k <= self.size, (k, self.size)
+        rng = np.random.default_rng([self.seed, int(t), _COHORT_STREAM])
+        keys = rng.exponential(size=self.size) / self.availability
+        if k == self.size:
+            users = np.arange(self.size, dtype=np.int64)
+        else:
+            part = np.argpartition(keys, k)[:k]
+            users = part[np.argsort(keys[part], kind="stable")].astype(
+                np.int64)
+        return CohortDraw(t=int(t), users=users, shards=self.shard_of(users),
+                          speed=self.speed[users])

@@ -45,7 +45,9 @@ __all__ = ["RoundCheckpointer", "Preempted", "RoundState"]
 
 # FLConfig fields a checkpoint must agree on to be restorable: anything that
 # alters the trajectory.  The cadence (checkpoint_every) is deliberately
-# absent — changing it on resume is safe.
+# absent — changing it on resume is safe.  The resolved EngineSpec is
+# guarded separately (``engine_fingerprint``): async-buffer state is only
+# meaningful under the engine knobs that produced it.
 _CONFIG_GUARD = ("strategy", "num_clients", "num_models", "rounds",
                  "local_epochs", "lr", "momentum", "batch_size", "epsilon",
                  "gamma_min", "metric", "stc_sparsity", "prox_mu", "seed",
@@ -66,7 +68,8 @@ class RoundState:
     """What a resumed ``run_federated`` gets back (plain attribute bag)."""
 
     def __init__(self, step: int, params: Any, slots: Any,
-                 ledger: ResourceLedger, meta: dict):
+                 ledger: ResourceLedger, meta: dict,
+                 buffer_tree: Any = None):
         self.step = step
         self.params = params
         self.slots = slots
@@ -78,6 +81,13 @@ class RoundState:
         self.round_wall = [float(x) for x in meta["round_wall"]]
         self.rng_state = meta["rng_state"]
         self.extra = meta.get("extra")
+        # Async round plane: extra history curves and the mid-tick pending
+        # buffer (stacked contribution pytree + JSON-able entry metadata).
+        self.async_hist = meta.get("async_hist")
+        self.buffer_meta = meta.get("buffer") or {"count": 0,
+                                                  "virtual_s": 0.0,
+                                                  "next_seq": 0}
+        self.buffer_tree = buffer_tree
 
 
 class RoundCheckpointer:
@@ -123,13 +133,27 @@ class RoundCheckpointer:
 
     def save(self, step: int, executor, params: Any, slots: Any,
              ledger: ResourceLedger, cfg, *, acc_hist, loss_hist, dif_hist,
-             iid_hist, round_wall, rng: np.random.Generator) -> str:
+             iid_hist, round_wall, rng: np.random.Generator,
+             async_hist: dict | None = None, buffer_tree: Any = None,
+             buffer_meta: dict | None = None) -> str:
+        """Serialize one round boundary.
+
+        ``async_hist`` / ``buffer_tree`` / ``buffer_meta`` are the buffered-
+        async engine's additions: the virtual-clock curves and the pending
+        contribution buffer (a stacked leading-axis pytree plus per-entry
+        arrival/round/slot/weight metadata).  The buffer rides the same
+        atomic npz + commit-marker protocol as params, so a kill between
+        server ticks resumes with the exact mid-tick buffer state.
+        """
         tree = {"params": jax.device_get(params)}
         saved_slots = executor.capture_slots(slots)
         if saved_slots is not None:
             tree["slots"] = saved_slots
+        if buffer_tree is not None:
+            tree["abuf"] = jax.device_get(buffer_tree)
         meta = {
             "config": {k: getattr(cfg, k) for k in _CONFIG_GUARD},
+            "engine": _engine_fingerprint(cfg),
             "ledger": ledger.as_dict(),
             "acc_hist": [float(x) for x in acc_hist],
             "loss_hist": [float(x) for x in loss_hist],
@@ -143,6 +167,10 @@ class RoundCheckpointer:
             "extra": (self.capture_extra()
                       if self.capture_extra is not None else None),
         }
+        if async_hist is not None:
+            meta["async_hist"] = {k: list(v) for k, v in async_hist.items()}
+        if buffer_meta is not None:
+            meta["buffer"] = buffer_meta
         path = save_checkpoint(self.directory, step, tree, metadata=meta)
         self._prune(step)
         if self.fail_after_save is not None and step == self.fail_after_save:
@@ -185,6 +213,14 @@ class RoundCheckpointer:
             if meta["has_slots"]:
                 like["slots"] = executor.slots_like(params_template,
                                                     int(meta["num_slots"]))
+            nbuf = int((meta.get("buffer") or {}).get("count", 0))
+            if nbuf > 0:
+                # Pending async contributions: params-shaped trees stacked
+                # on a leading entry axis.
+                like["abuf"] = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((nbuf,) + x.shape,
+                                                   x.dtype),
+                    params_template)
             try:
                 tree = restore_checkpoint(self.directory, step, like)
             except Exception as e:                  # noqa: BLE001
@@ -196,7 +232,8 @@ class RoundCheckpointer:
             slots = (executor.adopt_slots(tree["slots"])
                      if meta["has_slots"] else None)
             ledger = ResourceLedger(**meta["ledger"])
-            state = RoundState(step, tree["params"], slots, ledger, meta)
+            state = RoundState(step, tree["params"], slots, ledger, meta,
+                               buffer_tree=tree.get("abuf"))
             if self.restore_extra is not None and state.extra is not None:
                 self.restore_extra(state.extra)
             return state
@@ -207,6 +244,8 @@ class RoundCheckpointer:
         saved = meta.get("config", {})
         diffs = {k: (saved.get(k), getattr(cfg, k)) for k in _CONFIG_GUARD
                  if k in saved and saved[k] != getattr(cfg, k)}
+        if "engine" in meta and meta["engine"] != _engine_fingerprint(cfg):
+            diffs["engine"] = (meta["engine"], _engine_fingerprint(cfg))
         if diffs:
             raise ValueError(
                 "refusing to resume: checkpoint was written by a different "
@@ -216,6 +255,11 @@ class RoundCheckpointer:
     def apply_rng_state(rng: np.random.Generator, state: dict) -> None:
         """Reposition the model-seed generator to its checkpointed state."""
         rng.bit_generator.state = _rng_state_from_jsonable(state)
+
+
+def _engine_fingerprint(cfg) -> str:
+    from repro.fl.engine import engine_fingerprint
+    return engine_fingerprint(cfg)
 
 
 def _rng_state_jsonable(rng: np.random.Generator) -> dict:

@@ -61,14 +61,16 @@ from repro.core.auction import AuctionConfig
 from repro.core.diffusion import PLANNER_MODES, DiffusionPlanner, PlanCache
 from repro.core.schedule import WireEvent, charge_schedule
 from repro.fl.client import make_local_update
+from repro.fl.engine import (EngineSpec, RunHistory, RunResult,
+                             resolve_engine)
 from repro.fl.executors import EXECUTORS, make_executor
 from repro.fl.schedulers import (PROX_STRATEGIES, SCHEDULERS, RoundContext,
                                  apply_round_churn)
 
 Params = Any
 
-__all__ = ["FLConfig", "FLResult", "run_federated", "STRATEGIES",
-           "HOP_QUANTS"]
+__all__ = ["FLConfig", "FLResult", "RunResult", "EngineSpec",
+           "run_federated", "STRATEGIES", "HOP_QUANTS"]
 
 STRATEGIES = ("feddif", "fedavg", "fedswap", "stc", "tthf", "gossip",
               "feddif_stc", "fedprox", "feddif_prox", "d2d_random_walk")
@@ -140,34 +142,24 @@ class FLConfig:
                                      # up/downlinks stay fp32.  Composes
                                      # numerically with feddif_stc, whose
                                      # ledger keeps the STC accounting.
+    engine: "EngineSpec | str | None" = None
+                                     # The typed engine selection
+                                     # (repro.fl.engine): an EngineSpec, or
+                                     # an ENGINE_PRESETS name ("host",
+                                     # "fleet", "sharded", "auto", "async",
+                                     # "async_barrier").  When set it WINS
+                                     # over the legacy string kwargs above
+                                     # (executor / planner / shard_*), which
+                                     # keep working through the one-release
+                                     # EngineSpec.from_config deprecation
+                                     # shim.
 
 
-@dataclasses.dataclass
-class FLResult:
-    accuracy: list[float]
-    loss: list[float]
-    ledger: ResourceLedger
-    diffusion_rounds: list[int]
-    iid_distance: list[float]
-    config: FLConfig
-    final_params: Params = None
-    # Data-plane wall-clock per communication round (executor.run_round,
-    # synced on the aggregated global) — the executor-comparison signal
-    # benchmarks/run.py fleet_scaling gates on.  Empty for engines that
-    # bypass run_federated (seed_vmap replication).
-    round_wall_s: list = dataclasses.field(default_factory=list)
-    # Per-round phase breakdown dicts (train / hop_collective / mix / plan,
-    # seconds) when ``cfg.profile_phases`` — empty otherwise.  "plan" is the
-    # control plane (schedule build + churn + ledger charge); the rest are
-    # data-plane primitives timed inside the executor with a device sync
-    # after each (so the split is attributable, at the cost of overlap).
-    phase_s: list = dataclasses.field(default_factory=list)
-
-    def rounds_to_accuracy(self, target: float) -> int | None:
-        for i, a in enumerate(self.accuracy):
-            if a >= target:
-                return i + 1
-        return None
+# Legacy alias, one release: ``run_federated`` now returns the structured
+# :class:`repro.fl.engine.RunResult` (params, ledger, history, engine), whose
+# properties reproduce the old flat FLResult surface (``accuracy``, ``loss``,
+# ``final_params``, ``round_wall_s``, ``phase_s``, ``rounds_to_accuracy``).
+FLResult = RunResult
 
 
 def _uplink_gamma(channel: ChannelModel, pos: np.ndarray,
@@ -208,8 +200,6 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         broadcast; 0.0 (full-params runs) charges nothing.
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
-    assert cfg.executor in EXECUTORS, cfg.executor
-    assert cfg.planner in PLANNER_MODES, cfg.planner
     assert cfg.hop_quant in HOP_QUANTS, cfg.hop_quant
     if cfg.num_models > cfg.num_clients:
         # The paper trains M ≤ N models (one PUE trains one model per round,
@@ -217,6 +207,25 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
         raise ValueError(
             f"num_models={cfg.num_models} > num_clients={cfg.num_clients}; "
             f"FedDif requires M ≤ N (set num_models <= num_clients)")
+    # Engine resolution — the ONLY place an execution plane is selected.
+    espec = resolve_engine(cfg)
+    assert espec.planner in PLANNER_MODES, espec.planner
+    if espec.mode == "async":
+        from repro.fl.async_plane import run_buffered_async
+        return run_buffered_async(init_fn, loss_fn, client_batches, dsi,
+                                  data_sizes, eval_fn, cfg, espec,
+                                  plan_cache=plan_cache,
+                                  checkpointer=checkpointer,
+                                  base_bits=base_bits)
+    assert espec.mode in EXECUTORS, espec.mode
+    # Materialize the resolved spec onto the config the executor reads, so
+    # an explicit EngineSpec wins over stale legacy fields.
+    cfg_exec = dataclasses.replace(
+        cfg, executor=espec.mode, planner=espec.planner,
+        shard_overlap=espec.shard_overlap,
+        shard_hop_transport=espec.shard_hop_transport,
+        shard_microbatch=espec.shard_microbatch,
+        mesh_model_axis=espec.mesh_model_axis)
     n = cfg.num_clients
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -227,7 +236,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     planner = DiffusionPlanner(topology, channel, auction,
                                epsilon=cfg.epsilon,
                                max_rounds=cfg.max_diffusion_rounds,
-                               underlay=cfg.underlay, mode=cfg.planner)
+                               underlay=cfg.underlay, mode=espec.planner)
     if cfg.strategy in PROX_STRATEGIES:
         # proximal local solver (anchor = the received model's weights)
         from repro.fl.fedprox import make_prox_local_update
@@ -235,8 +244,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                                               cfg.momentum)
     else:
         local_update = make_local_update(loss_fn, cfg.momentum)
-    executor = make_executor(cfg.executor, loss_fn, local_update,
-                             client_batches, cfg)
+    executor = make_executor(espec.mode, loss_fn, local_update,
+                             client_batches, cfg_exec)
     ledger = ResourceLedger()
 
     global_params = init_fn(key)
@@ -321,7 +330,8 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                               dif_hist=dif_hist, iid_hist=iid_hist,
                               round_wall=round_wall, rng=rng)
 
-    return FLResult(accuracy=acc_hist, loss=loss_hist, ledger=ledger,
-                    diffusion_rounds=dif_hist, iid_distance=iid_hist,
-                    config=cfg, final_params=global_params,
-                    round_wall_s=round_wall, phase_s=phase_hist)
+    hist = RunHistory(accuracy=acc_hist, loss=loss_hist,
+                      diffusion_rounds=dif_hist, iid_distance=iid_hist,
+                      round_wall_s=round_wall, phase_s=phase_hist)
+    return RunResult(params=global_params, ledger=ledger, history=hist,
+                     engine=espec, config=cfg)

@@ -30,8 +30,16 @@ import sys
 
 from repro.experiments import REGISTRY, run_sweep, sweep_names
 from repro.experiments.artifacts import default_out_dir
+from repro.fl.engine import ENGINE_PRESETS
 
 __all__ = ["main"]
+
+# --engine accepts the replication engines (how replicate seeds are run)
+# plus the EngineSpec preset names (which execution plane every cell uses);
+# "auto" belongs to both vocabularies and keeps its replication meaning.
+_REPLICATION_ENGINES = ("auto", "seed_vmap", "loop")
+_ENGINE_CHOICES = list(_REPLICATION_ENGINES) + sorted(
+    set(ENGINE_PRESETS) - {"auto"})
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -47,8 +55,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="paper-approaching grid sizes")
     ap.add_argument("--seeds", type=int, default=1,
                     help="number of replicate seeds (0..N-1)")
-    ap.add_argument("--engine", choices=["auto", "seed_vmap", "loop"],
-                    default="auto")
+    ap.add_argument("--engine", choices=_ENGINE_CHOICES, default="auto",
+                    help="replication engine (auto/seed_vmap/loop) or an "
+                         "EngineSpec preset stamped on every cell (e.g. "
+                         "'async' for the buffered-async round plane, "
+                         "'async_barrier' for its sync comparison arm)")
     ap.add_argument("--executor", choices=["host", "fleet", "sharded"],
                     default="host",
                     help="data plane per cell: host reference loop, "
@@ -112,8 +123,15 @@ def main(argv: list[str] | None = None) -> int:
         state_dir = args.state_dir
         if state_dir is not None and args.sweep == "all":
             state_dir = os.path.join(state_dir, name)
+        # Preset names select the execution plane for every cell; the
+        # replication engine then defaults to "auto" (_pick_engine routes
+        # fleet/sharded/async cells onto the loop engine anyway).
+        preset = (args.engine if args.engine not in _REPLICATION_ENGINES
+                  else None)
+        repl_engine = args.engine if preset is None else "auto"
         artifact = run_sweep(name, smoke=smoke, seeds=seeds,
-                             out_dir=out_dir, engine=args.engine,
+                             out_dir=out_dir, engine=repl_engine,
+                             engine_preset=preset,
                              executor=args.executor, planner=args.planner,
                              checkpoint_every=args.checkpoint_every,
                              resume=args.resume,

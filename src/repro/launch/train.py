@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--engine", default=None,
+                    help="EngineSpec preset (host/fleet/sharded/auto/async/"
+                         "async_barrier); default: legacy host loop")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -97,7 +100,7 @@ def main():
 
     fl = FLConfig(strategy=args.strategy, num_clients=args.clients,
                   num_models=args.clients, rounds=args.rounds, lr=args.lr,
-                  seed=args.seed)
+                  seed=args.seed, engine=args.engine)
 
     def loss_fn(params, batch):
         return model.loss(params, batch, remat=False)

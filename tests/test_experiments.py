@@ -43,7 +43,8 @@ def test_every_sweep_expands_to_valid_specs(name, smoke):
         got = {"alpha": c.spec.alpha, "epsilon": c.spec.fl.epsilon,
                "gamma_min": c.spec.fl.gamma_min, "task": c.spec.task,
                "strategy": c.spec.fl.strategy,
-               "num_clients": c.spec.fl.num_clients}[c.axis]
+               "num_clients": c.spec.fl.num_clients,
+               "engine": c.spec.fl.engine}[c.axis]
         assert got == c.value
         if c.axis == "num_clients":   # scaling sweeps keep M = N
             assert c.spec.fl.num_models == c.value
