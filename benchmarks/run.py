@@ -120,6 +120,62 @@ def fig_async_sweep(full: bool):
     _run_registry_sweep("fig_async_sweep", "fig_async", full)
 
 
+def fig_scenarios_sweep(full: bool):
+    """fig_scenarios registry sweep: strategy × wireless-world scenario
+    (static / mobile / multicell / energy_capped) — accuracy plus the
+    ledger (incl. TX joules) per cell."""
+    _run_registry_sweep("fig_scenarios_sweep", "fig_scenarios", full)
+
+
+def world_step(full: bool):
+    """Steady-state throughput of the vmapped world transition — the pure
+    ``channels.world.step`` pytree update the mobile planner folds into its
+    jitted while_loop — plus the host/jax static-placement parity flag.
+    Writes ``BENCH_world_step.json`` (gated in benchmarks/budgets.json)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.channels.topology import CellTopology
+    from repro.channels.world import WorldConfig, init_world, step
+    from repro.experiments.artifacts import write_bench_json
+
+    n = 256 if full else 64
+    batch = 64
+    cfg = WorldConfig.for_scenario("mobile")
+    topo = CellTopology(num_pues=n)
+    rng = np.random.default_rng(0)
+    worlds = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_world(cfg, topo, np.random.default_rng([0, i]), n)
+          for i in range(batch)])
+
+    stepper = jax.jit(jax.vmap(
+        lambda w: step(w, step_m=cfg.step_m)))
+    worlds = jax.block_until_ready(stepper(worlds))   # compile
+    iters = 200 if full else 50
+    t0 = time.time()
+    w = worlds
+    for _ in range(iters):
+        w = stepper(w)
+    jax.block_until_ready(w)
+    dt = time.time() - t0
+    steps_per_s = batch * iters / dt
+
+    # Host/jax twin parity on the polar placement transform (the seam the
+    # static scenario's bit-identity rests on).
+    r = 250.0 * np.sqrt(rng.uniform(size=n))
+    theta = rng.uniform(0.0, 2 * np.pi, size=n)
+    host = CellTopology.positions_from_polar(r, theta, xp=np)
+    dev = CellTopology.positions_from_polar(jnp.asarray(r),
+                                            jnp.asarray(theta), xp=jnp)
+    parity_ok = bool(np.allclose(host, np.asarray(dev), atol=1e-5))
+
+    record = {"steps_per_s": float(steps_per_s), "parity_ok": parity_ok,
+              "batch": batch, "num_clients": n, "iters": iters}
+    print(f"world_step,vmapped_{batch}x{n},{steps_per_s:.0f},steps_per_s,"
+          f"parity_ok={parity_ok}", flush=True)
+    write_bench_json("world_step", record)
+
+
 def async_throughput(full: bool):
     """Buffered-async round plane throughput (the PR-9 tentpole headline).
 
@@ -896,11 +952,11 @@ def appendix_scenarios(full: bool):
 
 
 BENCHES = [fig2_convergence, fig3_alpha_sweep, fig4_epsilon_sweep,
-           fig5_qos_sweep, fig6_tasks, fig_async_sweep, async_throughput,
-           table1_accuracy, table2_comm_eff,
+           fig5_qos_sweep, fig6_tasks, fig_async_sweep, fig_scenarios_sweep,
+           async_throughput, table1_accuracy, table2_comm_eff,
            planner_speedup, executor_speedup, fleet_scaling, lm_hops,
-           kernel_data_plane, appendix_scenarios, kernels_microbench,
-           roofline_summary]
+           kernel_data_plane, world_step, appendix_scenarios,
+           kernels_microbench, roofline_summary]
 
 
 def check_budgets(budgets_path: str = "benchmarks/budgets.json") -> int:

@@ -2,8 +2,12 @@ from repro.channels.fading import ChannelModel, ChannelParams
 from repro.channels.resources import (ResourceLedger, required_bandwidth,
                                       outage_probability, spectral_efficiency)
 from repro.channels.topology import CellTopology
+from repro.channels.world import (SCENARIOS, HostWorld, WorldConfig,
+                                  WorldState, init_world, step)
 
 __all__ = [
     "ChannelModel", "ChannelParams", "ResourceLedger", "required_bandwidth",
     "outage_probability", "spectral_efficiency", "CellTopology",
+    "SCENARIOS", "HostWorld", "WorldConfig", "WorldState", "init_world",
+    "step",
 ]

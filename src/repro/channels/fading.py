@@ -9,12 +9,15 @@ carries the dB-domain parameters as they appear in the paper.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["ChannelParams", "ChannelModel"]
+
+_WARNED_INTERFERENCE_W = False
 
 
 @dataclasses.dataclass
@@ -55,13 +58,34 @@ class ChannelModel:
         h2 = rng.exponential(scale=1.0, size=dist_m.shape)
         return beta * h2
 
-    def snr(self, gains_sq: np.ndarray, interference_w: float = 0.0
-            ) -> np.ndarray:
-        """|g|^2 p / (sigma^2 + I) — Eq. (14); ``interference_w`` models the
-        underlay mode of D2D (Appendix C-F: D2D pairs reuse CUE uplink
-        resources, so co-channel CUE power raises the noise floor)."""
+    def snr(self, gains_sq: np.ndarray,
+            interference: np.ndarray | float = 0.0, *,
+            interference_w: float | None = None) -> np.ndarray:
+        """|g|^2 p / (sigma^2 + I) — Eq. (14) generalized to SINR.
+
+        ``interference`` is the per-link received co-channel power in watts
+        and broadcasts against ``gains_sq``: a scalar models the underlay
+        mode of D2D (Appendix C-F: D2D pairs reuse CUE uplink resources, so
+        co-channel CUE power raises the noise floor uniformly), while an
+        (n,) or (n, n) array carries per-receiver / per-link interference —
+        the multi-cell world of ``repro.channels.world``.
+
+        ``interference_w`` is the deprecated scalar spelling; it keeps
+        working for one release through this shim (warns once per process).
+        """
+        if interference_w is not None:
+            global _WARNED_INTERFERENCE_W
+            if not _WARNED_INTERFERENCE_W:
+                _WARNED_INTERFERENCE_W = True
+                warnings.warn(
+                    "ChannelModel.snr(interference_w=...) is deprecated; "
+                    "pass the per-link `interference` array (a scalar still "
+                    "broadcasts) — the legacy kwarg keeps working for one "
+                    "release through this shim",
+                    DeprecationWarning, stacklevel=2)
+            interference = interference_w
         p = self.params
-        return gains_sq * p.tx_power_w / (p.noise_w + interference_w)
+        return gains_sq * p.tx_power_w / (p.noise_w + interference)
 
     # ------------------------------------------------- device (jnp) plane
     #
@@ -83,11 +107,11 @@ class ChannelModel:
         return beta * h2
 
     def snr_jax(self, gains_sq: jax.Array,
-                interference_w: jax.Array | float = 0.0) -> jax.Array:
+                interference: jax.Array | float = 0.0) -> jax.Array:
         """Eq. (14) SNR for traced arrays — :meth:`snr` is pure operator
         arithmetic and already trace-safe; this alias keeps the device
         plane's API uniform without duplicating the formula."""
-        return self.snr(gains_sq, interference_w)
+        return self.snr(gains_sq, interference)
 
     def sample_cue_interference(self, rng: np.random.Generator,
                                 n_cues: int, cell_radius_m: float = 250.0

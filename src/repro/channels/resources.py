@@ -16,11 +16,13 @@ import numpy as np
 
 __all__ = ["spectral_efficiency", "required_bandwidth", "outage_probability",
            "spectral_efficiency_jax", "required_bandwidth_jax",
-           "outage_probability_jax", "ResourceLedger", "GAMMA_FLOOR"]
+           "outage_probability_jax", "ResourceLedger", "GAMMA_FLOOR",
+           "TX_POWER_W"]
 
 SUBFRAME_S = 1e-3          # 1 ms
 PRB_HZ = 180e3             # physical resource block bandwidth
 GAMMA_FLOOR = 0.05         # feasibility floor applied before ledger charging
+TX_POWER_W = 10 ** ((23.0 - 30.0) / 10.0)  # 23 dBm UE Tx power (3GPP)
 
 
 def spectral_efficiency(snr: np.ndarray) -> np.ndarray:
@@ -82,13 +84,20 @@ def outage_probability_jax(gamma_min: jax.Array | float, snr: jax.Array
 
 @dataclasses.dataclass
 class ResourceLedger:
-    """Accumulates the paper's Table-II communication-efficiency metrics."""
+    """Accumulates the paper's Table-II communication-efficiency metrics.
+
+    ``energy_j`` extends the ledger to UE-side transmit energy: each D2D
+    hop / uplink charge adds ``P_tx · S / (γ·B)`` joules (transmit power
+    times airtime at the link's achievable rate).  Downlink broadcasts are
+    BS-side and charge no UE energy.
+    """
     subframes: int = 0
     transmitted_models: int = 0
     transmitted_bits: float = 0.0
     bandwidth_hz_s: float = 0.0     # Σ required bandwidth (Eq. 15 units)
     uplink_models: int = 0          # model uploads to the BS (aggregation)
     downlink_models: int = 0        # model broadcasts from the BS
+    energy_j: float = 0.0           # Σ UE transmit energy (D2D + uplink)
 
     def charge_d2d(self, model_bits: float, gamma: float,
                    bandwidth_hz: float = PRB_HZ) -> int:
@@ -101,6 +110,7 @@ class ResourceLedger:
         self.transmitted_models += 1
         self.transmitted_bits += model_bits
         self.bandwidth_hz_s += model_bits / gamma
+        self.energy_j += TX_POWER_W * model_bits / (gamma * bandwidth_hz)
         return sf
 
     def charge_uplink(self, model_bits: float, gamma: float,
@@ -111,6 +121,7 @@ class ResourceLedger:
         self.uplink_models += 1
         self.transmitted_models += 1
         self.transmitted_bits += model_bits
+        self.energy_j += TX_POWER_W * model_bits / rate
         return sf
 
     def charge_downlink(self, model_bits: float, gamma: float, n_users: int,
@@ -130,6 +141,7 @@ class ResourceLedger:
             bandwidth_hz_s=self.bandwidth_hz_s + other.bandwidth_hz_s,
             uplink_models=self.uplink_models + other.uplink_models,
             downlink_models=self.downlink_models + other.downlink_models,
+            energy_j=self.energy_j + other.energy_j,
         )
 
     def as_dict(self) -> dict:

@@ -29,7 +29,16 @@ class CellTopology:
         n = self.num_pues if n is None else n
         r = self.radius_m * np.sqrt(rng.uniform(size=n))
         theta = rng.uniform(0.0, 2 * np.pi, size=n)
-        return np.stack([r * np.cos(theta), r * np.sin(theta)], axis=-1)
+        return self.positions_from_polar(r, theta, np)
+
+    @staticmethod
+    def positions_from_polar(r, theta, xp=np):
+        """Shared (r, θ) → (n, 2) transform behind both sampling twins.
+
+        Factored out so the host/jax parity property tests can feed the SAME
+        polar draws through both array namespaces — any drift between the
+        numpy and jnp position math shows up as a direct mismatch here."""
+        return xp.stack([r * xp.cos(theta), r * xp.sin(theta)], axis=-1)
 
     def pairwise_distances(self, pos: np.ndarray) -> np.ndarray:
         """(n, n) Euclidean distance matrix with a safe diagonal."""
@@ -54,7 +63,7 @@ class CellTopology:
         r = self.radius_m * jnp.sqrt(jax.random.uniform(kr, (n,)))
         theta = jax.random.uniform(kt, (n,), minval=0.0,
                                    maxval=2.0 * jnp.pi)
-        return jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+        return self.positions_from_polar(r, theta, jnp)
 
     @staticmethod
     def pairwise_distances_jax(pos: jax.Array) -> jax.Array:

@@ -1,0 +1,358 @@
+"""WorldState: the time-evolving wireless world behind every scenario.
+
+PR-9 and earlier sampled the channel piecemeal — a fresh uniform-disc
+placement per round (``channels/topology.py``), a one-shot Rayleigh draw
+(``channels/fading.py``) and a sub-frame ledger (``channels/resources.py``)
+— which hard-wires the paper's single *static* evaluation world (Eqs.
+12–14, 39).  This module packages placement, mobility, serving-cell
+assignment, interference and per-client energy into one state object with
+two synchronized planes:
+
+* :class:`WorldState` — a NamedTuple **pytree** of arrays plus a pure,
+  vmappable :func:`step` transition.  The device-resident planner carries
+  it through its ``lax.while_loop`` (``core/planner.py``) so scenario
+  evolution inside Algorithm 1/2 costs zero host round-trips.
+* :class:`HostWorld` — the stateful host-side oracle the FL control plane
+  (``fl/server.py`` / ``fl/async_plane.py`` / the replicate engines)
+  advances once per communication round off the per-round control stream
+  ``np.random.default_rng([topology_seed, t])``.
+
+Scenarios (the ``FLConfig.scenario`` axis):
+
+``static``
+    The paper's world, verbatim: :meth:`HostWorld.advance_round` consumes
+    exactly ``topology.sample_positions(rng, n)`` and nothing else, zero
+    interference, infinite energy — so static runs stay bit-identical to
+    pre-world code (the degeneracy contract).
+``mobile``
+    Random-waypoint traces: clients move toward a waypoint at
+    ``speed_mps`` and redraw it on arrival.  Between communication rounds
+    the host advances ``round_s`` of world time; within a round the
+    planner steps ``substep_s`` per diffusion round — deterministically,
+    so plans stay pure functions of their inputs.
+``multicell``
+    ``num_cells`` cells on a ring; each client redraws uniformly in its
+    home cell每 round, is served by the nearest (max-mean-SINR) center —
+    handoff — and every link sees deterministic per-receiver co-channel
+    interference from the non-serving centers (Eq. 14 → SINR).
+``energy_capped``
+    Static placement (bit-identical draws) plus a finite per-client
+    transmit-energy budget; depleted clients stop training/transmitting
+    (churn semantics — the wire already committed is still charged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channels.fading import ChannelModel
+from repro.channels.resources import TX_POWER_W, spectral_efficiency
+from repro.channels.topology import CellTopology
+
+__all__ = ["SCENARIOS", "WorldConfig", "WorldState", "HostWorld",
+           "cell_centers", "init_world", "step", "receiver_interference_w"]
+
+SCENARIOS = ("static", "mobile", "multicell", "energy_capped")
+
+#: Default per-client transmit-energy budget (J) for ``energy_capped``;
+#: ≈ a few hundred FCN-sized hops at cell-median spectral efficiency.
+DEFAULT_ENERGY_BUDGET_J = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorldConfig:
+    """Static (hashable) scenario knobs — safe as a jit static argument."""
+    scenario: str = "static"
+    speed_mps: float = 15.0        # random-waypoint speed
+    substep_s: float = 1.0         # world time per diffusion round (planner)
+    round_s: float = 10.0          # world time per communication round
+    num_cells: int = 3             # multicell ring size
+    cell_spacing_factor: float = 2.0   # ring radius in units of cell radius
+    energy_budget_j: float = float("inf")
+
+    def __post_init__(self):
+        if self.scenario not in SCENARIOS:
+            raise ValueError(f"unknown scenario {self.scenario!r}; expected "
+                             f"one of {SCENARIOS}")
+
+    @property
+    def step_m(self) -> float:
+        """Distance moved per planner substep (mobile scenario)."""
+        return self.speed_mps * self.substep_s
+
+    @classmethod
+    def for_scenario(cls, scenario: str,
+                     energy_budget_j: float | None = None) -> "WorldConfig":
+        if energy_budget_j is None:
+            energy_budget_j = (DEFAULT_ENERGY_BUDGET_J
+                               if scenario == "energy_capped"
+                               else float("inf"))
+        return cls(scenario=scenario, energy_budget_j=energy_budget_j)
+
+
+class WorldState(NamedTuple):
+    """The evolving world as a pytree of arrays (batchable under vmap)."""
+    positions: jax.Array      # (..., n, 2) client positions [m]
+    waypoints: jax.Array      # (..., n, 2) random-waypoint targets [m]
+    serving: jax.Array        # (..., n) int32 serving-cell index
+    energy_j: jax.Array       # (..., n) cumulative UE transmit energy [J]
+    t: jax.Array              # (...) int32 substep counter
+
+
+def cell_centers(cfg: WorldConfig, radius_m: float) -> np.ndarray:
+    """(K, 2) cell centers: origin plus a ring of spacing-factor · radius."""
+    k = max(int(cfg.num_cells), 1)
+    if k == 1:
+        return np.zeros((1, 2))
+    ring = cfg.cell_spacing_factor * radius_m
+    ang = 2.0 * np.pi * np.arange(k - 1) / (k - 1)
+    ring_xy = ring * np.stack([np.cos(ang), np.sin(ang)], axis=-1)
+    return np.concatenate([np.zeros((1, 2)), ring_xy], axis=0)
+
+
+def init_world(cfg: WorldConfig, topology: CellTopology,
+               rng: np.random.Generator, n: int) -> WorldState:
+    """Host-side initial world (numpy arrays; ducks as the pytree)."""
+    if cfg.scenario == "multicell":
+        centers = cell_centers(cfg, topology.radius_m)
+        home = np.arange(n) % len(centers)
+        pos = topology.sample_positions(rng, n) + centers[home]
+        serving = _nearest_center(pos, centers)
+    else:
+        pos = topology.sample_positions(rng, n)
+        serving = np.zeros(n, dtype=np.int32)
+    way = (topology.sample_positions(rng, n) if cfg.scenario == "mobile"
+           else pos.copy())
+    return WorldState(positions=pos, waypoints=way, serving=serving,
+                      energy_j=np.zeros(n), t=np.int32(0))
+
+
+def step(world: WorldState, key: jax.Array | None = None, *,
+         step_m: float, radius_m: float = 250.0) -> WorldState:
+    """Pure, vmappable world transition: one random-waypoint substep.
+
+    Clients advance ``step_m`` meters toward their waypoint and clamp on
+    arrival.  Without ``key`` the transition is fully deterministic — the
+    form the jitted planner uses inside its while_loop, so plans remain
+    pure functions of their inputs.  With ``key``, arrived clients redraw
+    a fresh uniform-disc waypoint (the steady-state mobility form the
+    ``world_step`` bench measures).
+    """
+    delta = world.waypoints - world.positions
+    d = jnp.linalg.norm(delta, axis=-1, keepdims=True)
+    frac = jnp.minimum(step_m, d) / jnp.maximum(d, 1e-9)
+    pos = world.positions + delta * frac
+    way = world.waypoints
+    if key is not None:
+        kr, kt = jax.random.split(key)
+        shape = world.positions.shape[:-1]
+        r = radius_m * jnp.sqrt(jax.random.uniform(kr, shape))
+        th = jax.random.uniform(kt, shape, minval=0.0, maxval=2.0 * jnp.pi)
+        cand = jnp.stack([r * jnp.cos(th), r * jnp.sin(th)], axis=-1)
+        arrived = d[..., 0] <= step_m
+        way = jnp.where(arrived[..., None], cand, way)
+    return WorldState(positions=pos, waypoints=way, serving=world.serving,
+                      energy_j=world.energy_j, t=world.t + 1)
+
+
+def _nearest_center(pos: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    """SINR-based handoff: equal-power centers with a common pathloss
+    exponent make argmax mean SINR ≡ argmin distance."""
+    d = np.linalg.norm(pos[:, None, :] - centers[None, :, :], axis=-1)
+    return np.argmin(d, axis=1).astype(np.int32)
+
+
+def receiver_interference_w(pos: np.ndarray, serving: np.ndarray,
+                            centers: np.ndarray, channel: ChannelModel
+                            ) -> np.ndarray:
+    """Per-receiver co-channel interference (W): Σ over non-serving cell
+    centers of large-scale received power (Rayleigh marginalized, like the
+    mean SNR of Eq. 39).  Deterministic given positions — both planner
+    modes see identical values."""
+    d = np.linalg.norm(pos[:, None, :] - centers[None, :, :], axis=-1)
+    beta = 10.0 ** (channel.large_scale_db(np.maximum(d, 1.0)) / 10.0)
+    rx = beta * channel.params.tx_power_w          # (n, K)
+    total = rx.sum(axis=1)
+    own = np.take_along_axis(rx, serving[:, None].astype(int), axis=1)[:, 0]
+    return total - own
+
+
+@dataclasses.dataclass
+class HostWorld:
+    """Stateful host-side world the FL control plane advances per round.
+
+    The RNG discipline mirrors the pre-world control plane exactly: every
+    consumption comes from the per-round stream the caller passes in, and
+    the ``static`` scenario consumes *exactly* the draws the old code did
+    (``topology.sample_positions`` then the uplink ``sample_gains``) — the
+    bit-identical degeneracy contract.
+    """
+    cfg: WorldConfig
+    topology: CellTopology
+    channel: ChannelModel
+    num_clients: int
+    state: WorldState | None = None
+    rounds_advanced: int = 0
+
+    @classmethod
+    def create(cls, scenario: str, topology: CellTopology,
+               channel: ChannelModel, num_clients: int,
+               energy_budget_j: float | None = None) -> "HostWorld":
+        cfg = WorldConfig.for_scenario(scenario,
+                                       energy_budget_j=energy_budget_j)
+        return cls(cfg=cfg, topology=topology, channel=channel,
+                   num_clients=num_clients)
+
+    # ------------------------------------------------------- round advance
+
+    def advance_round(self, rng: np.random.Generator) -> np.ndarray:
+        """Advance one communication round; returns (n, 2) positions."""
+        n, cfg = self.num_clients, self.cfg
+        if cfg.scenario in ("static", "energy_capped"):
+            pos = self.topology.sample_positions(rng, n)
+            energy = (self.state.energy_j if self.state is not None
+                      else np.zeros(n))
+            self.state = WorldState(positions=pos, waypoints=pos.copy(),
+                                    serving=np.zeros(n, dtype=np.int32),
+                                    energy_j=energy,
+                                    t=np.int32(self.rounds_advanced))
+        elif cfg.scenario == "mobile":
+            if self.state is None:
+                self.state = init_world(cfg, self.topology, rng, n)
+            else:
+                st = self.state
+                delta = st.waypoints - st.positions
+                d = np.linalg.norm(delta, axis=-1, keepdims=True)
+                move = cfg.speed_mps * cfg.round_s
+                frac = np.minimum(move, d) / np.maximum(d, 1e-9)
+                pos = st.positions + delta * frac
+                # Fixed consumption: candidate waypoints are drawn every
+                # round regardless of how many clients arrived, so the
+                # control stream stays deterministic per (seed, t).
+                cand = self.topology.sample_positions(rng, n)
+                arrived = d[:, 0] <= move
+                way = np.where(arrived[:, None], cand, st.waypoints)
+                self.state = WorldState(positions=pos, waypoints=way,
+                                        serving=st.serving,
+                                        energy_j=st.energy_j,
+                                        t=st.t + 1)
+        elif cfg.scenario == "multicell":
+            centers = self._centers()
+            home = np.arange(n) % len(centers)
+            pos = self.topology.sample_positions(rng, n) + centers[home]
+            energy = (self.state.energy_j if self.state is not None
+                      else np.zeros(n))
+            self.state = WorldState(positions=pos, waypoints=pos.copy(),
+                                    serving=_nearest_center(pos, centers),
+                                    energy_j=energy,
+                                    t=np.int32(self.rounds_advanced))
+        self.rounds_advanced += 1
+        return np.asarray(self.state.positions)
+
+    def _centers(self) -> np.ndarray:
+        return cell_centers(self.cfg, self.topology.radius_m)
+
+    # -------------------------------------------------------- channel view
+
+    def interference(self) -> np.ndarray | float:
+        """Per-receiver co-channel interference this round (W).
+
+        Scalar 0.0 outside multicell — the exact value the pre-world SNR
+        path used, so static arithmetic is unchanged bit-for-bit."""
+        if self.cfg.scenario != "multicell" or self.state is None:
+            return 0.0
+        return receiver_interference_w(np.asarray(self.state.positions),
+                                       np.asarray(self.state.serving),
+                                       self._centers(), self.channel)
+
+    def link_interference(self) -> np.ndarray | float:
+        """(n, n) per-link interference: receiver-side broadcast of
+        :meth:`interference` (columns index the receiving client)."""
+        i_rx = self.interference()
+        if np.isscalar(i_rx):
+            return i_rx
+        return np.broadcast_to(np.asarray(i_rx)[None, :],
+                               (self.num_clients, self.num_clients))
+
+    def uplink_gamma(self, rng: np.random.Generator) -> np.ndarray:
+        """Per-client uplink spectral efficiency to the serving BS.
+
+        Static path is arithmetic- and draw-identical to the pre-world
+        ``_uplink_gamma``: distance to the origin, one Rayleigh draw, zero
+        interference.  Multicell uses the serving-center distance and the
+        deterministic inter-cell interference seen at that BS."""
+        pos = np.asarray(self.state.positions)
+        if self.cfg.scenario == "multicell":
+            centers = self._centers()
+            serving = np.asarray(self.state.serving)
+            d = np.maximum(np.linalg.norm(pos - centers[serving], axis=-1),
+                           1.0)
+            rx = (10.0 ** (self.channel.large_scale_db(
+                np.maximum(np.linalg.norm(
+                    centers[serving][:, None, :] - centers[None, :, :],
+                    axis=-1), 1.0)) / 10.0) * self.channel.params.tx_power_w)
+            own = np.take_along_axis(rx, serving[:, None].astype(int),
+                                     axis=1)[:, 0]
+            interference = rx.sum(axis=1) - own
+        else:
+            d = np.maximum(np.linalg.norm(pos, axis=-1), 1.0)
+            interference = 0.0
+        gains = self.channel.sample_gains(d, rng)
+        return spectral_efficiency(self.channel.snr(gains, interference))
+
+    # ------------------------------------------------------------- energy
+
+    @property
+    def has_energy_cap(self) -> bool:
+        return np.isfinite(self.cfg.energy_budget_j)
+
+    def depleted(self) -> np.ndarray:
+        """(n,) mask of clients whose cumulative TX energy spent the budget
+        in *prior* rounds — the set the scheduler drops this round."""
+        if self.state is None:
+            return np.zeros(self.num_clients, dtype=bool)
+        return np.asarray(self.state.energy_j) >= self.cfg.energy_budget_j
+
+    def charge_energy(self, per_client_j: np.ndarray) -> None:
+        """Accumulate this round's per-client transmit energy."""
+        st = self.state
+        self.state = WorldState(positions=st.positions,
+                                waypoints=st.waypoints, serving=st.serving,
+                                energy_j=np.asarray(st.energy_j)
+                                + np.asarray(per_client_j), t=st.t)
+
+    # ----------------------------------------------------------- planning
+
+    def planner_world(self) -> WorldState | None:
+        """The within-round WorldState handed to the diffusion planner —
+        float32 to match the device plane.  Only mobile needs in-loop
+        stepping; the other scenarios are frozen within a round and are
+        fully described by (positions, interference)."""
+        if self.cfg.scenario != "mobile" or self.state is None:
+            return None
+        st = self.state
+        return WorldState(
+            positions=np.asarray(st.positions, np.float32),
+            waypoints=np.asarray(st.waypoints, np.float32),
+            serving=np.asarray(st.serving, np.int32),
+            energy_j=np.asarray(st.energy_j, np.float32),
+            t=np.int32(st.t))
+
+
+def per_client_energy_j(schedule, num_clients: int,
+                        bandwidth_hz: float) -> np.ndarray:
+    """Decompose a round schedule's wire into per-client TX energy (J).
+
+    Events with an unknown transmitter (``src < 0``, e.g. BS downlink)
+    charge no client.  Mirrors the ledger's joule arithmetic exactly:
+    ``P_tx · bits / (γ·B)`` per event."""
+    e = np.zeros(num_clients)
+    for ev in schedule.wire:
+        if ev.kind in ("d2d", "uplink") and ev.src >= 0:
+            g = max(float(ev.gamma), 1e-9)
+            e[ev.src] += TX_POWER_W * float(ev.bits) / (g * bandwidth_hz)
+    return e

@@ -27,7 +27,8 @@ from repro.core.matching import max_weight_matching
 from repro.channels.resources import (outage_probability, required_bandwidth,
                                       spectral_efficiency)
 
-__all__ = ["AuctionConfig", "AuctionResult", "compute_bids", "run_auction"]
+__all__ = ["AuctionConfig", "AuctionResult", "compute_bids",
+           "fuse_learning_value", "run_auction"]
 
 
 @dataclasses.dataclass
@@ -65,10 +66,26 @@ def compute_bids(state: dol_lib.DiffusionState, dsi: np.ndarray,
     return np.asarray(cur)[:, None] - np.asarray(cand)
 
 
+def fuse_learning_value(bids: np.ndarray, values: np.ndarray | None,
+                        value_weight: float) -> np.ndarray:
+    """Learning-value bid fusion: ``bids · (1 + w · value[i])``.
+
+    ``values`` is a per-client predictive-uncertainty score in [0, 1]
+    (``fl/experiment.py``'s held-out probe); scaling the IID-distance
+    valuation multiplicatively keeps the (18b) positivity constraint's
+    sign structure intact while routing models toward *informative* data.
+    Host oracle of ``repro.kernels.ops.bid_value_fuse``.
+    """
+    if values is None or value_weight == 0.0:
+        return bids
+    return bids * (1.0 + value_weight * np.asarray(values)[None, :])
+
+
 def run_auction(state: dol_lib.DiffusionState, dsi: np.ndarray,
                 data_sizes: np.ndarray, gains_sq: np.ndarray,
                 mean_snr: np.ndarray, snr: np.ndarray,
-                config: AuctionConfig) -> AuctionResult:
+                config: AuctionConfig, values: np.ndarray | None = None,
+                value_weight: float = 0.0) -> AuctionResult:
     """One diffusion-configuration step (Algorithm 1).
 
     Args:
@@ -79,9 +96,13 @@ def run_auction(state: dol_lib.DiffusionState, dsi: np.ndarray,
       mean_snr:   (N, N) large-scale-only mean SNR (for Eq. 39 outage).
       snr:        (N, N) instantaneous SNR (for Eq. 14 rate).
       config:     auction parameters.
+      values / value_weight: optional per-client learning-value signal
+        fused into the valuations (:func:`fuse_learning_value`); the
+        default (off) path is bit-identical to the pre-value auction.
     """
     m_models, n_pues = state.visited.shape
     bids = compute_bids(state, dsi, data_sizes, config.metric)       # (M,N)
+    bids = fuse_learning_value(bids, values, value_weight)
 
     gamma = spectral_efficiency(snr)                                 # (N,N)
     # Per (model, PUE) edge: the link is holder(m) -> i.

@@ -110,25 +110,37 @@ def plan_cache_key(topology_seed: int, round_index: int, dsi: np.ndarray,
 
 
 def feddif_cache_key(cfg, t: int, dsi: np.ndarray, data_sizes: np.ndarray,
-                     model_bits: float, auction: AuctionConfig) -> tuple:
+                     model_bits: float, auction: AuctionConfig,
+                     values: np.ndarray | None = None) -> tuple:
     """The one :func:`plan_cache_key` builder for FedDif call sites.
 
     ``cfg`` is the experiment's ``FLConfig`` (duck-typed to avoid the import
     cycle).  Folds in every plan input: the sizing knobs, the full
     :class:`AuctionConfig` surface (incl. ``outage_max`` and
-    ``bandwidth_budget``, which alter feasibility/FCFS), and the planner
-    mode (host and jax plans are parity-checked but not bit-guaranteed, so
-    they never share a cache line).  Schedulers, the replicate engines and
-    the sweep pre-planner all call this helper — hand-built ``extra=``
-    tuples cannot drift apart.
+    ``bandwidth_budget``, which alter feasibility/FCFS), the world scenario
+    and learning-value weight, and the planner mode (host and jax plans are
+    parity-checked but not bit-guaranteed, so they never share a cache
+    line).  Schedulers, the replicate engines and the sweep pre-planner all
+    call this helper — hand-built ``extra=`` tuples cannot drift apart.
+
+    ``values`` is the round's learning-value vector.  It depends on the
+    model parameters — i.e. on the *model-init seed* — so when the value
+    signal is active its digest joins the key and plans stop being
+    shareable across replicate seeds (the pre-planner skips those cells).
     """
+    vdigest = ""
+    if values is not None and getattr(cfg, "uncertainty_weight", 0.0):
+        vdigest = hashlib.sha1(
+            np.ascontiguousarray(values, np.float32).tobytes()).hexdigest()
     return plan_cache_key(
         cfg.topology_seed, t, dsi, data_sizes, cfg.epsilon, cfg.gamma_min,
         cfg.metric,
         extra=(cfg.num_clients, cfg.num_models, float(model_bits),
                cfg.max_diffusion_rounds, cfg.allow_retraining, cfg.underlay,
                float(auction.outage_max), float(auction.bandwidth_budget),
-               getattr(cfg, "planner", "host")))
+               getattr(cfg, "planner", "host"),
+               getattr(cfg, "scenario", "static"),
+               float(getattr(cfg, "uncertainty_weight", 0.0)), vdigest))
 
 
 class PlanCache:
@@ -296,13 +308,26 @@ class DiffusionPlanner:
             data_sizes: np.ndarray, rng: np.random.Generator,
             positions: np.ndarray | None = None,
             cache: PlanCache | None = None,
-            cache_key: tuple | None = None) -> DiffusionPlan:
+            cache_key: tuple | None = None,
+            interference: np.ndarray | float = 0.0,
+            values: np.ndarray | None = None,
+            value_weight: float = 0.0,
+            world=None, step_m: float = 0.0) -> DiffusionPlan:
         """Runs auctions until halting; mutates ``state`` with visited sets.
 
         When ``cache``/``cache_key`` are given (see :func:`plan_cache_key`),
         a hit skips the whole auction loop: the cached plan is returned and
         ``state`` is fast-forwarded to the cached post-plan snapshot.  The
         caller is responsible for a key that captures every plan input.
+
+        ``interference`` is the world's per-receiver co-channel power
+        (multicell SINR — frozen within the round); ``values`` /
+        ``value_weight`` fuse the learning-value signal into the bids;
+        ``world`` + ``step_m`` (mobile scenario) step a random-waypoint
+        WorldState one deterministic substep per diffusion round, moving
+        every link's pathloss under the auction as the paper's Eqs. 12–14
+        would see it.  All default off — the static path is bit-identical
+        to the pre-world planner.
 
         With ``mode='jax'`` the same contract is served by the jitted
         device planner (:mod:`repro.core.planner`): identical hop lists on
@@ -314,7 +339,9 @@ class DiffusionPlanner:
             from repro.core.planner import plan_communication_round_jax
             return plan_communication_round_jax(
                 self, state, dsi, data_sizes, rng, positions=positions,
-                cache=cache, cache_key=cache_key)
+                cache=cache, cache_key=cache_key,
+                interference=interference, values=values,
+                value_weight=value_weight, world=world, step_m=step_m)
         if cache is not None and cache_key is not None:
             entry = cache.lookup(cache_key)
             if entry is not None:
@@ -322,11 +349,17 @@ class DiffusionPlanner:
                 state.restore(post_state)
                 return plan
         n = dsi.shape[0]
-        if positions is None:
+        pos = way = None
+        if world is not None:
+            pos = np.asarray(world.positions, np.float64)
+            way = np.asarray(world.waypoints, np.float64)
+            positions = pos
+        elif positions is None:
             positions = self.topology.sample_positions(rng, n)
         dist = self.topology.pairwise_distances(positions)
         beta = 10 ** (self.channel.large_scale_db(dist) / 10.0)
-        mean_snr = self.channel.snr(beta)      # Rayleigh power marginalized
+        mean_snr = self.channel.snr(beta, interference)  # Rayleigh power
+        #                                                  marginalized
 
         hops: list[DiffusionHop] = []
         eff_hist: list[float] = []
@@ -342,15 +375,25 @@ class DiffusionPlanner:
                 active &= ~state.visited.all(axis=1)
             if not active.any():
                 break
+            if world is not None:
+                # Host mirror of the planner-loop world step (mobile).
+                delta = way - pos
+                d = np.linalg.norm(delta, axis=-1, keepdims=True)
+                frac = np.minimum(step_m, d) / np.maximum(d, 1e-9)
+                pos = pos + delta * frac
+                dist = self.topology.pairwise_distances(pos)
+                beta = 10 ** (self.channel.large_scale_db(dist) / 10.0)
+                mean_snr = self.channel.snr(beta, interference)
             gains = self.channel.sample_gains(dist, rng)
-            interference = 0.0
+            cue_interference = 0.0
             if self.underlay:
                 n_cues = rng.poisson(self.topology.cue_rate)
-                interference = self.channel.sample_cue_interference(
+                cue_interference = self.channel.sample_cue_interference(
                     rng, n_cues, self.topology.radius_m)
-            snr = self.channel.snr(gains, interference)
+            snr = self.channel.snr(gains, interference + cue_interference)
             result = run_auction(state, dsi, data_sizes, gains, mean_snr,
-                                 snr, self.auction)
+                                 snr, self.auction, values=values,
+                                 value_weight=value_weight)
             # Only schedule hops for still-active models.
             scheduled = [(m, i) for m, i in result.pairs if active[m]]
             if not scheduled:

@@ -209,6 +209,11 @@ class PlannerState(NamedTuple):
     chain_size: Array     # (..., M)
     visited: Array        # (..., M, N) bool
     holder: Array         # (..., M) int32
+    #: Optional wireless-world carry (``repro.channels.world.WorldState``):
+    #: the mobile scenario steps it once per diffusion round inside the
+    #: jitted planner loop.  ``None`` (an empty pytree subtree) everywhere
+    #: else, keeping the pre-world tree structure and traces untouched.
+    world: object | None = None
 
     @classmethod
     def init(cls, num_models: int, num_clients: int, num_classes: int
@@ -234,6 +239,7 @@ class PlannerState(NamedTuple):
             visited=self.visited.at[model, client].set(True),
             holder=self.holder.at[model].set(
                 jnp.asarray(client, self.holder.dtype)),
+            world=self.world,
         )
 
     def record_round(self, dst: Array, mask: Array, dsi: Array,
@@ -260,6 +266,7 @@ class PlannerState(NamedTuple):
             chain_size=jnp.where(mask, new_size, self.chain_size),
             visited=self.visited.at[m, dst].set(self.visited[m, dst] | mask),
             holder=jnp.where(mask, dst, self.holder),
+            world=self.world,
         )
 
     def iid_distances(self, metric: str = "w1_norm") -> Array:

@@ -47,9 +47,9 @@ from repro.core.matching import auction_assign
 from repro.kernels import ops as kernel_ops
 
 __all__ = ["PlanInputs", "PlanOutputs", "draw_gamma_sequence",
-           "device_gamma_sequence", "plan_round_inputs", "plan_rounds",
-           "plan_rounds_batched", "decode_plan",
-           "plan_communication_round_jax"]
+           "draw_fading_sequence", "device_gamma_sequence",
+           "plan_round_inputs", "plan_rounds", "plan_rounds_batched",
+           "decode_plan", "plan_communication_round_jax"]
 
 
 class PlanInputs(NamedTuple):
@@ -65,13 +65,23 @@ class PlanInputs(NamedTuple):
     holder0: jax.Array       # (M,) int32
     dsi: jax.Array           # (N, C)
     data_sizes: jax.Array    # (N,)
-    gamma_seq: jax.Array     # (R, N, N) per-round spectral efficiency
+    gamma_seq: jax.Array     # (R, N, N) per-round spectral efficiency —
+                             # reinterpreted as the raw Exp(1) Rayleigh
+                             # powers |h|² when the mobile world recomputes
+                             # γ from stepped positions inside the loop
     mean_snr: jax.Array      # (N, N) large-scale-only SNR (Eq. 39 outage)
     epsilon: jax.Array       # () halting tolerance
     gamma_min: jax.Array     # () constraint (18e)
     outage_max: jax.Array    # () Eq. (39) cap
     bandwidth_budget: jax.Array  # () constraint (18f)
     model_bits: jax.Array    # () S in Eq. (15)
+    # Optional trailing fields (None keeps the pre-world pytree structure
+    # and therefore the pre-world compiled traces).
+    value: jax.Array | None = None         # (N,) learning value in [0, 1]
+    value_weight: jax.Array | None = None  # () fusion weight w
+    world: object | None = None            # WorldState (mobile scenario)
+    chan: jax.Array | None = None          # (4,) [p/σ², β₀dB, κ, d₀] for
+                                           # in-loop Eq. 12–14 (mobile)
 
 
 class PlanOutputs(NamedTuple):
@@ -92,9 +102,19 @@ class PlanOutputs(NamedTuple):
                              # iteration cap (plan may be truncated)
 
 
-def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
-                 ) -> PlanOutputs:
-    """One cell's whole communication round, as a masked ``while_loop``."""
+def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool,
+                 mobility: bool = False, step_m: float = 0.0,
+                 use_value: bool = False) -> PlanOutputs:
+    """One cell's whole communication round, as a masked ``while_loop``.
+
+    ``mobility`` (static) threads the WorldState carry through the loop:
+    each diffusion round deterministically steps the random-waypoint world
+    by ``step_m`` meters and recomputes Eqs. 12–14/39 from the stepped
+    positions — ``inp.gamma_seq`` then carries the raw Exp(1) Rayleigh
+    powers instead of precomputed γ.  ``use_value`` (static) fuses the
+    per-client learning value into the Eq.-32 bids via the kernel data
+    plane.  Both flags default off, leaving the pre-world trace untouched.
+    """
     max_rounds, n, _ = inp.gamma_seq.shape
     m = inp.dol0.shape[0]
     mi = jnp.arange(m)
@@ -103,7 +123,8 @@ def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
         dol=jnp.asarray(inp.dol0, jnp.float32),
         chain_size=jnp.asarray(inp.chain_size0, jnp.float32),
         visited=jnp.asarray(inp.visited0, bool),
-        holder=jnp.asarray(inp.holder0, jnp.int32))
+        holder=jnp.asarray(inp.holder0, jnp.int32),
+        world=inp.world if mobility else None)
     bufs0 = PlanOutputs(
         num_rounds=jnp.int32(0),
         dst=jnp.zeros((max_rounds, m), jnp.int32),
@@ -120,8 +141,28 @@ def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
 
     def body(carry):
         st, k, done, out = carry
-        gamma = jax.lax.dynamic_index_in_dim(inp.gamma_seq, k, 0,
-                                             keepdims=False)
+        if mobility:
+            # One deterministic random-waypoint substep per diffusion
+            # round, then Eqs. 12–14/39 from the stepped positions — all
+            # inside the trace, zero host round-trips.
+            from repro.channels.topology import CellTopology
+            from repro.channels.world import step as world_step
+            w = world_step(st.world, step_m=step_m)
+            st = st._replace(world=w)
+            dist = CellTopology.pairwise_distances_jax(w.positions)
+            p_over_noise, beta0_db, kappa, d0 = (inp.chan[0], inp.chan[1],
+                                                 inp.chan[2], inp.chan[3])
+            ls_db = beta0_db - 10.0 * kappa * jnp.log10(
+                jnp.maximum(dist, d0) / d0)
+            mean_snr_k = 10.0 ** (ls_db / 10.0) * p_over_noise   # (N, N)
+            pout_k = outage_probability_jax(inp.gamma_min, mean_snr_k)
+            h2 = jax.lax.dynamic_index_in_dim(inp.gamma_seq, k, 0,
+                                              keepdims=False)
+            gamma = spectral_efficiency_jax(mean_snr_k * h2)
+        else:
+            pout_k = pout
+            gamma = jax.lax.dynamic_index_in_dim(inp.gamma_seq, k, 0,
+                                                 keepdims=False)
         iid = dol_lib.iid_distance(st.dol, metric)
         active = iid > inp.epsilon
         if not allow_retraining:
@@ -137,12 +178,15 @@ def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
         cand = kernel_ops.dol_bid_scores(
             st.dol, st.chain_size, inp.dsi, inp.data_sizes, metric=metric)
         bids = iid[:, None] - cand                           # (M, N)
+        if use_value:
+            bids = kernel_ops.bid_value_fuse(bids, inp.value,
+                                             inp.value_weight)
         gamma_edge = gamma[st.holder]                        # (M, N)
         feas = bids > 0.0
         if not allow_retraining:
             feas &= ~st.visited
         feas &= gamma_edge >= inp.gamma_min
-        feas &= pout[st.holder] <= inp.outage_max
+        feas &= pout_k[st.holder] <= inp.outage_max
         feas = feas.at[mi, st.holder].set(False)  # no self-transmission
         bw = required_bandwidth_jax(inp.model_bits, gamma_edge)
         wmat = jnp.where(feas & jnp.isfinite(bw) & (bw > 0.0),
@@ -212,7 +256,8 @@ def _plan_rounds(inp: PlanInputs, *, metric: str, allow_retraining: bool
 
 
 plan_rounds = jax.jit(_plan_rounds,
-                      static_argnames=("metric", "allow_retraining"))
+                      static_argnames=("metric", "allow_retraining",
+                                       "mobility", "step_m", "use_value"))
 
 
 @partial(jax.jit, static_argnames=("metric", "allow_retraining"))
@@ -242,17 +287,33 @@ def plan_rounds_batched(inputs: list[PlanInputs], metric: str,
 
 
 def draw_gamma_sequence(channel, dist: np.ndarray, rng: np.random.Generator,
-                        max_rounds: int) -> np.ndarray:
+                        max_rounds: int,
+                        interference: np.ndarray | float = 0.0
+                        ) -> np.ndarray:
     """Pre-draw ``max_rounds`` Rayleigh rounds from the host Generator.
 
     Draw k equals the lazy host loop's draw for diffusion round k (numpy
     Generators are sequential), so host and jax planners see identical
     channels; the jax mode just consumes the stream ``max_rounds`` draws
-    deep regardless of where the loop halts.
+    deep regardless of where the loop halts.  ``interference`` is the
+    per-receiver (or scalar) co-channel power of the multicell world —
+    frozen within a communication round, so folding it here keeps the
+    planner body interference-free.
     """
     gains = np.stack([channel.sample_gains(dist, rng)
                       for _ in range(max_rounds)])
-    return spectral_efficiency(channel.snr(gains))
+    return spectral_efficiency(channel.snr(gains, interference))
+
+
+def draw_fading_sequence(rng: np.random.Generator, n: int,
+                         max_rounds: int) -> np.ndarray:
+    """(R, N, N) raw Exp(1) Rayleigh powers |h|², stream-identical to the
+    draws inside ``channel.sample_gains`` (which consumes exactly one
+    ``rng.exponential`` of the distance shape per call).  The mobile world
+    consumes these and recomputes β — hence γ — from stepped positions
+    inside the planner loop."""
+    return np.stack([rng.exponential(scale=1.0, size=(n, n))
+                     for _ in range(max_rounds)])
 
 
 def device_gamma_sequence(channel, key: jax.Array, dist: jax.Array,
@@ -267,24 +328,47 @@ def device_gamma_sequence(channel, key: jax.Array, dist: jax.Array,
 
 def plan_round_inputs(planner, state, dsi: np.ndarray,
                       data_sizes: np.ndarray, rng: np.random.Generator,
-                      positions: np.ndarray | None = None
-                      ) -> tuple[PlanInputs, np.ndarray]:
+                      positions: np.ndarray | None = None,
+                      interference: np.ndarray | float = 0.0,
+                      values: np.ndarray | None = None,
+                      value_weight: float = 0.0,
+                      world=None) -> tuple[PlanInputs, np.ndarray | None]:
     """Build :class:`PlanInputs` the way the host planner would see them.
 
     Returns ``(inputs, gamma_seq64)`` — the float64 host-precision channel
     realizations are kept alongside the float32 device copy so
     :func:`decode_plan` can stamp hops with the exact γ the host ledger
     would charge (bit-identical ``bandwidth_hz_s``).
+
+    ``interference`` folds the (frozen-within-round) multicell SINR into
+    the pre-drawn γ sequence; ``values``/``value_weight`` populate the
+    learning-value fields; ``world`` (a float32 WorldState) switches to
+    mobile form — ``gamma_seq`` then carries raw Exp(1) powers, the
+    channel constants ride in ``chan``, and ``gamma_seq64`` is ``None``
+    (γ is computed in-loop at float32).
     """
     n = dsi.shape[0]
-    if positions is None:
+    chan = planner.channel
+    if world is not None:
+        positions = np.asarray(world.positions)
+    elif positions is None:
         positions = planner.topology.sample_positions(rng, n)
     dist = planner.topology.pairwise_distances(positions)
-    beta = 10 ** (planner.channel.large_scale_db(dist) / 10.0)
-    mean_snr = planner.channel.snr(beta)
+    beta = 10 ** (chan.large_scale_db(dist) / 10.0)
+    mean_snr = chan.snr(beta, interference)
     max_rounds = planner.max_rounds or n * (n - 1)
-    gamma_seq = draw_gamma_sequence(planner.channel, dist, rng, max_rounds)
+    if world is not None:
+        seq = draw_fading_sequence(rng, n, max_rounds)
+        gamma_seq64 = None
+        p = chan.params
+        chan_vec = jnp.asarray([p.tx_power_w / p.noise_w, p.beta0_db,
+                                p.kappa, p.d0_m], jnp.float32)
+    else:
+        seq = draw_gamma_sequence(chan, dist, rng, max_rounds, interference)
+        gamma_seq64 = seq
+        chan_vec = None
     a = planner.auction
+    use_value = values is not None and value_weight != 0.0
     return PlanInputs(
         dol0=jnp.asarray(state.dol, jnp.float32),
         chain_size0=jnp.asarray(state.chain_size, jnp.float32),
@@ -292,13 +376,18 @@ def plan_round_inputs(planner, state, dsi: np.ndarray,
         holder0=jnp.asarray(state.holder, jnp.int32),
         dsi=jnp.asarray(dsi, jnp.float32),
         data_sizes=jnp.asarray(data_sizes, jnp.float32),
-        gamma_seq=jnp.asarray(gamma_seq, jnp.float32),
+        gamma_seq=jnp.asarray(seq, jnp.float32),
         mean_snr=jnp.asarray(mean_snr, jnp.float32),
         epsilon=jnp.float32(planner.epsilon),
         gamma_min=jnp.float32(a.gamma_min),
         outage_max=jnp.float32(a.outage_max),
         bandwidth_budget=jnp.float32(a.bandwidth_budget),
-        model_bits=jnp.float32(a.model_bits)), gamma_seq
+        model_bits=jnp.float32(a.model_bits),
+        value=(jnp.asarray(values, jnp.float32) if use_value else None),
+        value_weight=(jnp.float32(value_weight) if use_value else None),
+        world=(jax.tree.map(jnp.asarray, world) if world is not None
+               else None),
+        chan=chan_vec), gamma_seq64
 
 
 def decode_plan(out: PlanOutputs, num_models: int,
@@ -348,7 +437,11 @@ def plan_communication_round_jax(planner, state, dsi: np.ndarray,
                                  data_sizes: np.ndarray,
                                  rng: np.random.Generator,
                                  positions: np.ndarray | None = None,
-                                 cache=None, cache_key: tuple | None = None):
+                                 cache=None, cache_key: tuple | None = None,
+                                 interference: np.ndarray | float = 0.0,
+                                 values: np.ndarray | None = None,
+                                 value_weight: float = 0.0,
+                                 world=None, step_m: float = 0.0):
     """Jax-mode twin of ``DiffusionPlanner.plan_communication_round``:
     same signature/contract (mutates ``state``, consults the cache), but the
     whole bid → auction → schedule loop runs in one jitted device call."""
@@ -363,9 +456,13 @@ def plan_communication_round_jax(planner, state, dsi: np.ndarray,
             state.restore(post_state)
             return plan
     inp, gamma64 = plan_round_inputs(planner, state, dsi, data_sizes, rng,
-                                     positions)
+                                     positions, interference=interference,
+                                     values=values,
+                                     value_weight=value_weight, world=world)
     out = plan_rounds(inp, metric=planner.auction.metric,
-                      allow_retraining=planner.auction.allow_retraining)
+                      allow_retraining=planner.auction.allow_retraining,
+                      mobility=world is not None, step_m=float(step_m),
+                      use_value=inp.value is not None)
     if not bool(out.converged):
         warnings.warn("jax planner: an auction hit its iteration cap; the "
                       "plan may schedule fewer hops than the host oracle",

@@ -45,11 +45,17 @@ class WireEvent:
 
     ``gamma`` is stored already clamped to the scheduler's feasibility floor,
     so replaying events is a pure ledger operation.
+
+    ``src`` attributes the transmission to the sending client slot so the
+    energy-capped world can charge per-client joules; ``-1`` means "no UE
+    transmitter" (BS downlink, or a legacy scheduler that predates
+    attribution) and charges no client budget.
     """
     kind: str
     bits: float
     gamma: float
     n_users: int = 1
+    src: int = -1
 
 
 @dataclasses.dataclass(frozen=True)

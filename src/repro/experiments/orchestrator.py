@@ -78,7 +78,11 @@ def prepopulate_plan_cache(cells: Sequence[SweepCell], cache: PlanCache
         cfg = cell.spec.fl
         if (cell.strategy not in _FEDDIF_STRATEGIES
                 or getattr(cfg, "planner", "host") != "jax"
-                or cfg.topology_seed is None or cfg.underlay):
+                or cfg.topology_seed is None or cfg.underlay
+                or getattr(cfg, "scenario", "static") != "static"
+                or getattr(cfg, "uncertainty_weight", 0.0) > 0.0):
+            # Non-static worlds replay their own RNG/mobility inside
+            # run_federated; value-fused plans depend on each seed's params.
             skipped += 1
             continue
         _, _, part, _ = load_experiment_data(cell.spec, with_loaders=False)
@@ -174,6 +178,12 @@ def _pick_engine(cell: SweepCell, engine: str) -> str:
         # seed_vmap engine hand-rolls fedavg/feddif rounds and would skip
         # them.
         return "loop"
+    if (getattr(cell.spec.fl, "scenario", "static") != "static"
+            or getattr(cell.spec.fl, "uncertainty_weight", 0.0) > 0.0):
+        # Evolving-world scenarios advance HostWorld state on the host
+        # control plane, and the value signal makes plans seed-dependent —
+        # both outside the seed-stacked engine's contract.
+        return "loop"
     if engine == "auto":
         return ("seed_vmap" if cell.strategy in SEED_VMAP_STRATEGIES
                 else "loop")
@@ -242,6 +252,7 @@ def run_cell(cell: SweepCell, seeds: Sequence[int],
             "pusch_bandwidth_hz_s": float(ledger.bandwidth_hz_s),  # Eq. 15
             "uplink_models": int(ledger.uplink_models),
             "downlink_models": int(ledger.downlink_models),
+            "energy_j": float(getattr(ledger, "energy_j", 0.0)),
         },
         "wall_clock_s": wall,
     }

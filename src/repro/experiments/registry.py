@@ -20,6 +20,7 @@ name                paper artifact           axis
 ``table2_strategies``  Table II              strategy (FedAvg…FedDif)
 ``fig7_scaling``    scaling (beyond paper)   client population N (with churn)
 ``fig_async``       async (beyond paper)     engine preset (sync vs buffered)
+``fig_scenarios``   world (beyond paper)     wireless scenario (static…energy)
 ==================  =======================  ==================================
 
 Consumers must not hand-roll their own grids: ``benchmarks/run.py`` and the
@@ -48,6 +49,7 @@ AXIS_TARGETS = {
     "strategy": ("fl", "strategy"),
     "num_clients": ("fl", "num_clients"),   # num_models tracks it (M = N)
     "engine": ("fl", "engine"),             # EngineSpec preset name
+    "scenario": ("fl", "scenario"),         # channels/world.SCENARIOS name
 }
 
 
@@ -170,6 +172,10 @@ class SweepDef:
         if self.axis == "engine":
             for v in self.values:
                 assert v in ENGINE_PRESETS, v
+        if self.axis == "scenario":
+            from repro.channels.world import SCENARIOS
+            for v in self.values:
+                assert v in SCENARIOS, v
 
 
 REGISTRY: dict[str, SweepDef] = {}
@@ -307,6 +313,30 @@ register(SweepDef(
     num_clients=16,
     smoke_num_clients=4,
     fl_overrides={"churn_rate": 0.05, "max_diffusion_rounds": 4},
+))
+
+register(SweepDef(
+    name="fig_scenarios",
+    figure="World scenarios (beyond paper)",
+    axis="scenario",
+    description="The time-evolving wireless world (channels/world): static "
+                "placement (the paper's per-round redraw), random-waypoint "
+                "mobility stepping under the diffusion loop, multi-cell "
+                "placement with SINR handoff + inter-cell interference, and "
+                "finite per-client TX-energy budgets (depleted clients drop "
+                "out).  Strategy × scenario matrix of accuracy and the "
+                "ledger (incl. joules) — how much of FedDif's gain survives "
+                "a world that moves under it.",
+    values=("static", "mobile", "multicell", "energy_capped"),
+    smoke_values=("static", "mobile", "energy_capped"),
+    strategies=("fedavg", "d2d_random_walk", "feddif"),
+    rounds=12,
+    smoke_rounds=2,
+    num_clients=20,
+    smoke_num_clients=4,
+    num_samples=8000,
+    smoke_num_samples=1000,
+    fl_overrides={"max_diffusion_rounds": 6},
 ))
 
 register(SweepDef(

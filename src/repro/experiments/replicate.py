@@ -133,6 +133,19 @@ def run_replicates_vmapped(spec: ExperimentSpec, seeds: Sequence[int],
     if cfg.churn_rate > 0.0:
         raise ValueError("seed-vmapped replication does not model churn "
                          "(fl.churn_rate > 0); use run_replicates_loop")
+    if getattr(cfg, "scenario", "static") != "static":
+        # Mobility / handoff / energy evolve HostWorld state per round on
+        # the host control plane; the replicated device loop has no slot
+        # for it (and value-fused plans are seed-dependent anyway).
+        raise ValueError(
+            f"seed-vmapped replication supports scenario='static' only "
+            f"(got {cfg.scenario!r}); use run_replicates_loop")
+    if getattr(cfg, "uncertainty_weight", 0.0) > 0.0:
+        raise ValueError(
+            "seed-vmapped replication cannot fuse learning values "
+            "(fl.uncertainty_weight > 0): the value signal depends on each "
+            "seed's params, so plans are not shareable; use "
+            "run_replicates_loop")
     seeds = [int(s) for s in seeds]
 
     # ---- data / model setup (identical to run_experiment, done once) -----

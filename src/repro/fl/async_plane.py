@@ -100,7 +100,8 @@ class _Contribution:
 def _arrival_model(b: AsyncSpec, seed: int, t: int, pos: np.ndarray,
                    up_gamma: np.ndarray, channel: ChannelModel,
                    data_rows: np.ndarray, speed: np.ndarray,
-                   hop_bits: float, model_bits: float) -> ArrivalModel:
+                   hop_bits: float, model_bits: float,
+                   interference: np.ndarray | float = 0.0) -> ArrivalModel:
     """Draw round ``t``'s delay world from the jnp channel twins.
 
     Pure in ``(seed, t)``: the key is ``fold_in(PRNGKey(seed), t)``, so the
@@ -126,8 +127,13 @@ def _arrival_model(b: AsyncSpec, seed: int, t: int, pos: np.ndarray,
     dist = CellTopology.pairwise_distances_jax(
         jnp.asarray(pos, jnp.float32))
     gains = channel.sample_gains_jax(kd, jnp.maximum(dist, 1.0))
-    gamma_d2d = jnp.maximum(spectral_efficiency_jax(channel.snr_jax(gains)),
-                            GAMMA_FLOOR)
+    # World interference enters the delay SINR exactly as it enters the
+    # scheduler's rate SINR: per-receiver power broadcast over columns.
+    # (Passed through unconverted: the scalar-0.0 static case must follow
+    # the exact arithmetic of the pre-world default argument.)
+    gamma_d2d = jnp.maximum(
+        spectral_efficiency_jax(channel.snr_jax(gains, interference)),
+        GAMMA_FLOOR)
     hop_s = float(hop_bits) / (gamma_d2d * PRB_HZ)
     uplink_s = float(model_bits) / (np.asarray(up_gamma, np.float64)
                                     * PRB_HZ)
@@ -165,13 +171,16 @@ def run_buffered_async(init_fn: Callable, loss_fn: Callable,
                        eval_fn: Callable, cfg, espec: EngineSpec,
                        plan_cache: PlanCache | None = None,
                        checkpointer=None,
-                       base_bits: float = 0.0) -> RunResult:
+                       base_bits: float = 0.0,
+                       value_fn: Callable | None = None) -> RunResult:
     """Event-driven counterpart of ``run_federated``'s round loop.
 
     Called by ``run_federated`` when the resolved engine mode is
     ``"async"`` — same arguments plus the resolved :class:`EngineSpec`.
     """
-    from repro.fl.server import STRATEGIES, _uplink_gamma
+    from repro.channels.world import HostWorld, per_client_energy_j
+    from repro.fl.server import STRATEGIES
+    from repro.fl.schedulers import apply_energy_cap
 
     b = espec.buffered
     assert cfg.strategy in STRATEGIES, cfg.strategy
@@ -192,6 +201,12 @@ def run_buffered_async(init_fn: Callable, loss_fn: Callable,
                                               cfg.momentum)
     else:
         local_update = make_local_update(loss_fn, cfg.momentum)
+    # Same evolving world as the sync loop — the async plane's arrival
+    # model reads its interference so delay SINRs and rate SINRs agree.
+    world = HostWorld.create(getattr(cfg, "scenario", "static"), topology,
+                             channel, n,
+                             energy_budget_j=getattr(cfg, "energy_budget_j",
+                                                     None))
 
     # Control-plane seed for delay/cohort draws: the topology seed when set
     # (plan-cache sharing across replicate seeds then stays valid — every
@@ -251,6 +266,12 @@ def run_buffered_async(init_fn: Callable, loss_fn: Callable,
             seq = int(state.buffer_meta["next_seq"])
             pending = _unpack_buffer(state.buffer_tree, state.buffer_meta)
             heapq.heapify(pending)
+            # Replay the world up to the restored round (same per-round RNG
+            # streams as the live run, so mobile positions resume exactly).
+            if cfg.topology_seed is not None:
+                for tt in range(start_t):
+                    world.advance_round(
+                        np.random.default_rng([cfg.topology_seed, tt]))
 
     def eval_due(t: int) -> bool:
         return (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1
@@ -297,15 +318,20 @@ def run_buffered_async(init_fn: Callable, loss_fn: Callable,
             ctrl_rng = np.random.default_rng([cfg.topology_seed, t])
         else:
             ctrl_rng = rng
-        pos = topology.sample_positions(ctrl_rng, n)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng),
-                              GAMMA_FLOOR)
+        pos = world.advance_round(ctrl_rng)
+        up_gamma = np.maximum(world.uplink_gamma(ctrl_rng), GAMMA_FLOOR)
+        learning_value = None
+        if value_fn is not None \
+                and getattr(cfg, "uncertainty_weight", 0.0) > 0.0:
+            learning_value = np.asarray(value_fn(global_params), np.float64)
         ctx = RoundContext(cfg=cfg, t=t, dsi=dsi_t, data_sizes=sizes_t,
                            pos=pos, rng=ctrl_rng, up_gamma=up_gamma,
                            topology=topology, channel=channel,
                            planner=planner, model_bits=model_bits,
                            param_template=global_params,
-                           plan_cache=plan_cache, hop_bits=hop_bits)
+                           plan_cache=plan_cache, hop_bits=hop_bits,
+                           world=world, interference=world.interference(),
+                           learning_value=learning_value)
         schedule = SCHEDULERS[cfg.strategy](ctx)
         if schedule.persistent or schedule.agg_mode != ASYNC_COMPATIBLE_AGG:
             raise ValueError(
@@ -318,13 +344,18 @@ def run_buffered_async(init_fn: Callable, loss_fn: Callable,
             schedule.wire.append(WireEvent("downlink", float(base_bits),
                                            float(np.median(up_gamma)), n))
         schedule = apply_round_churn(ctx, schedule)
+        if world.has_energy_cap:
+            schedule = apply_energy_cap(ctx, schedule, world.depleted())
 
         # --- arrival annotation + Eq.-15 charging ------------------------
         model = _arrival_model(b, ctrl_seed, t, pos, up_gamma, channel,
-                               sizes_t, speed, hop_bits, model_bits)
+                               sizes_t, speed, hop_bits, model_bits,
+                               interference=world.interference())
         schedule, arrival_s, parked = annotate_arrivals(
             schedule, model, hop_deadline_s=b.hop_deadline_s)
         charge_schedule(ledger, schedule)
+        if world.has_energy_cap:
+            world.charge_energy(per_client_energy_j(schedule, n, PRB_HZ))
 
         # --- dispatch: inner op replay, contributions into the heap ------
         slots = inner.run_ops(schedule, global_params, None)

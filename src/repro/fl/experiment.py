@@ -174,7 +174,34 @@ def run_experiment(spec: ExperimentSpec, plan_cache=None,
         a, l = _eval(params)
         return float(a), float(l)
 
+    value_fn = None
+    if spec.fl.uncertainty_weight > 0.0:
+        # Learning-value probe: a fixed 32-sample draw from each client's
+        # shard (np.resize wraps small shards); the value is the global
+        # model's mean predictive entropy on it, normalized to [0, 1] by
+        # log of the class count.  High entropy = data the model is still
+        # uncertain about = a shard worth routing models toward — the
+        # signal the planner fuses into its bids (kernels.bid_value_fuse).
+        import jax.numpy as jnp
+        probe = np.stack([train.x[np.resize(idx, 32)]
+                          for idx in part.indices])
+
+        @jax.jit
+        def _values(params):
+            full = view.merge_fn(params)
+
+            def one(x):
+                lg = model.logits(full, x)
+                logp = jax.nn.log_softmax(lg, axis=-1)
+                ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+                return jnp.mean(ent) / jnp.log(lg.shape[-1])
+
+            return jax.vmap(one)(probe)
+
+        def value_fn(params):
+            return np.asarray(_values(params))
+
     return run_federated(view.init_fn, view.loss_fn, batches, part.dsi,
                          part.data_sizes, eval_fn, spec.fl,
                          plan_cache=plan_cache, checkpointer=checkpointer,
-                         base_bits=view.base_bits)
+                         base_bits=view.base_bits, value_fn=value_fn)

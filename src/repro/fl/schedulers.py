@@ -32,7 +32,7 @@ from repro.core.schedule import (MixOp, PermuteOp, RoundSchedule, TrainOp,
 from repro.fl.compression import compressed_bits
 
 __all__ = ["RoundContext", "SCHEDULERS", "PROX_STRATEGIES", "GAMMA_FLOOR",
-           "apply_round_churn"]
+           "apply_round_churn", "apply_energy_cap"]
 
 # Strategies whose local solver is the FedProx proximal step.
 PROX_STRATEGIES = ("fedprox", "feddif_prox")
@@ -65,6 +65,14 @@ class RoundContext:
     # params (int8-packed adapter hops, FLConfig.hop_quant); None charges
     # model_bits.  Up/downlinks always charge model_bits.
     hop_bits: float | None = None
+    # The round's wireless world (channels/world.HostWorld).  ``interference``
+    # is its per-receiver co-channel power — scalar 0.0 outside multicell, so
+    # the static SNR arithmetic is bit-identical to the pre-world path.
+    world: object | None = None
+    interference: np.ndarray | float = 0.0
+    # Per-client learning value in [0, 1] (None when the signal is off);
+    # fused into the FedDif bids with FLConfig.uncertainty_weight.
+    learning_value: np.ndarray | None = None
     _dist: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     def d2d_bits(self) -> float:
@@ -92,13 +100,17 @@ def _downlink(ctx: RoundContext, bits: float | None = None) -> WireEvent:
 def _uplink(ctx: RoundContext, client: int,
             bits: float | None = None) -> WireEvent:
     return WireEvent("uplink", ctx.model_bits if bits is None else bits,
-                     float(ctx.up_gamma[client]))
+                     float(ctx.up_gamma[client]), src=int(client))
 
 
 def _pair_gamma(ctx: RoundContext) -> np.ndarray:
-    """One D2D channel draw over the round's positions (Sec. III-D)."""
+    """One D2D channel draw over the round's positions (Sec. III-D).
+
+    ``ctx.interference`` folds the world's per-receiver co-channel power
+    into the SINR; its (n,) form broadcasts over the receiver (column)
+    axis of the (n, n) link matrix."""
     gains = ctx.channel.sample_gains(ctx.pair_distances(), ctx.rng)
-    return spectral_efficiency(ctx.channel.snr(gains))
+    return spectral_efficiency(ctx.channel.snr(gains, ctx.interference))
 
 
 # Stream tag separating the churn draw from every other [seed, t] consumer.
@@ -130,6 +142,22 @@ def apply_round_churn(ctx: RoundContext,
     rng = np.random.default_rng([seed, ctx.t, _CHURN_STREAM])
     drop = rng.random(ctx.cfg.num_clients) < rate
     return apply_churn(schedule, drop)
+
+
+def apply_energy_cap(ctx: RoundContext, schedule: RoundSchedule,
+                     depleted: np.ndarray) -> RoundSchedule:
+    """Drop clients whose TX-energy budget was spent in *prior* rounds.
+
+    The ``energy_capped`` scenario's enforcement point: depletion reuses the
+    churn semantics (:func:`~repro.core.schedule.apply_churn` — no training,
+    zero aggregation weight, already-scheduled wire still charges, exactly
+    like a battery dying mid-round).  The mask is deterministic (a pure
+    function of past schedules), so no RNG stream is consumed and
+    un-capped runs are untouched."""
+    depleted = np.asarray(depleted, dtype=bool)
+    if not depleted.any():
+        return schedule
+    return apply_churn(schedule, depleted)
 
 
 # ----------------------------------------------------------------- schedulers
@@ -189,17 +217,29 @@ def schedule_feddif(ctx: RoundContext) -> RoundSchedule:
     cache_key = None
     if ctx.plan_cache is not None and cfg.topology_seed is not None:
         cache_key = feddif_cache_key(cfg, ctx.t, ctx.dsi, ctx.data_sizes,
-                                     ctx.d2d_bits(), ctx.planner.auction)
+                                     ctx.d2d_bits(), ctx.planner.auction,
+                                     values=ctx.learning_value)
+    # World-model plan inputs: per-receiver interference (multicell), the
+    # within-round WorldState + substep for mobile, and the learning-value
+    # signal.  All default to the off/static values, keeping the pre-world
+    # call bit-identical.
+    planner_world = (ctx.world.planner_world()
+                     if ctx.world is not None else None)
+    step_m = (ctx.world.cfg.step_m
+              if planner_world is not None else 0.0)
     plan = ctx.planner.plan_communication_round(
         state, ctx.dsi, ctx.data_sizes, ctx.rng, positions=ctx.pos,
-        cache=ctx.plan_cache, cache_key=cache_key)
+        cache=ctx.plan_cache, cache_key=cache_key,
+        interference=ctx.interference, values=ctx.learning_value,
+        value_weight=float(getattr(cfg, "uncertainty_weight", 0.0)),
+        world=planner_world, step_m=step_m)
 
     slot_of_model = np.arange(m) % max(n, 1)
     for k in range(plan.num_rounds):
         hops = plan.hops_in_round(k)
         for h in hops:
             wire.append(WireEvent("d2d", hop_bits,
-                                  max(h.gamma, GAMMA_FLOOR)))
+                                  max(h.gamma, GAMMA_FLOOR), src=int(h.src)))
         src_of_dst, mask, slot_of_model = complete_round_permutation(
             [(h.model, h.dst) for h in hops], slot_of_model, n)
         ops.append(PermuteOp(src_of_dst, mask, compress=compress))
@@ -237,7 +277,8 @@ def schedule_fedswap(ctx: RoundContext) -> RoundSchedule:
             if src == dst:
                 continue
             wire.append(WireEvent("d2d", ctx.d2d_bits(),
-                                  max(float(gamma[src, dst]), GAMMA_FLOOR)))
+                                  max(float(gamma[src, dst]), GAMMA_FLOOR),
+                                  src=src))
             holder[mi] = dst
             hops.append((mi, dst))
             if not visited[mi, dst]:
@@ -294,7 +335,8 @@ def schedule_d2d_random_walk(ctx: RoundContext) -> RoundSchedule:
                 continue
             dst = int(ctx.rng.choice(cand))
             wire.append(WireEvent("d2d", ctx.d2d_bits(),
-                                  max(float(gamma[src, dst]), GAMMA_FLOOR)))
+                                  max(float(gamma[src, dst]), GAMMA_FLOOR),
+                                  src=src))
             holder[mi] = dst
             visited[mi, dst] = True
             round_hops.append((mi, dst))
@@ -348,7 +390,8 @@ def schedule_tthf(ctx: RoundContext) -> RoundSchedule:
         head = cl[0]
         for i in cl[1:]:
             wire.append(WireEvent("d2d", ctx.model_bits,
-                                  max(float(gamma[i, head]), GAMMA_FLOOR)))
+                                  max(float(gamma[i, head]), GAMMA_FLOOR),
+                                  src=i))
         groups.append((tuple(cl), tuple(float(ctx.data_sizes[i])
                                         for i in cl)))
     ops.append(MixOp(tuple(groups)))
@@ -378,9 +421,9 @@ def schedule_gossip(ctx: RoundContext) -> RoundSchedule:
     for a in range(0, n - 1, 2):
         i, j = int(perm[a]), int(perm[a + 1])
         wire.append(WireEvent("d2d", ctx.model_bits,
-                              max(float(gamma[i, j]), GAMMA_FLOOR)))
+                              max(float(gamma[i, j]), GAMMA_FLOOR), src=i))
         wire.append(WireEvent("d2d", ctx.model_bits,
-                              max(float(gamma[j, i]), GAMMA_FLOOR)))
+                              max(float(gamma[j, i]), GAMMA_FLOOR), src=j))
         groups.append(((i, j), (float(ctx.data_sizes[i]),
                                 float(ctx.data_sizes[j]))))
     return RoundSchedule(

@@ -53,9 +53,10 @@ import jax
 import numpy as np
 
 from repro.channels.fading import ChannelModel
-from repro.channels.resources import (GAMMA_FLOOR, ResourceLedger,
+from repro.channels.resources import (GAMMA_FLOOR, PRB_HZ, ResourceLedger,
                                       spectral_efficiency)
 from repro.channels.topology import CellTopology
+from repro.channels.world import SCENARIOS, HostWorld, per_client_energy_j
 from repro.core import aggregation as agg
 from repro.core.auction import AuctionConfig
 from repro.core.diffusion import PLANNER_MODES, DiffusionPlanner, PlanCache
@@ -65,7 +66,7 @@ from repro.fl.engine import (EngineSpec, RunHistory, RunResult,
                              resolve_engine)
 from repro.fl.executors import EXECUTORS, make_executor
 from repro.fl.schedulers import (PROX_STRATEGIES, SCHEDULERS, RoundContext,
-                                 apply_round_churn)
+                                 apply_energy_cap, apply_round_churn)
 
 Params = Any
 
@@ -127,6 +128,22 @@ class FLConfig:
                                      # a fused round cannot be sub-timed)
     churn_rate: float = 0.0          # per-round P(client drops out) — see
                                      # schedulers.apply_round_churn
+    scenario: str = "static"         # wireless world evolution
+                                     # (channels/world.SCENARIOS): "static" |
+                                     # "mobile" (random waypoint) |
+                                     # "multicell" (SINR handoff + inter-cell
+                                     # interference) | "energy_capped"
+                                     # (finite TX budgets).  "static" is
+                                     # bit-identical to the pre-world runtime.
+    uncertainty_weight: float = 0.0  # learning-value bid fusion weight w:
+                                     # the planner's bids become
+                                     # bids·(1 + w·value); 0.0 = off, the
+                                     # exact pre-value auction
+    energy_budget_j: float | None = None
+                                     # per-client TX energy budget (J) when
+                                     # scenario="energy_capped"; None = the
+                                     # scenario default.  Depleted clients
+                                     # drop out via churn semantics.
     planner: str = "host"            # control plane: "host" numpy oracle |
                                      # "jax" jitted/batched device planner
     allow_retraining: bool = False   # Appendix C-D (drops constraint 18c)
@@ -176,7 +193,9 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                   eval_fn: Callable[[Params], tuple[float, float]],
                   cfg: FLConfig,
                   plan_cache: PlanCache | None = None,
-                  checkpointer=None, base_bits: float = 0.0) -> FLResult:
+                  checkpointer=None, base_bits: float = 0.0,
+                  value_fn: Callable[[Params], np.ndarray] | None = None
+                  ) -> FLResult:
     """Run one FL experiment.
 
     Args:
@@ -198,9 +217,14 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
       base_bits: serialized size of the frozen base under an adapter view
         (``repro.fl.adapters``).  Charged once as a round-0 downlink
         broadcast; 0.0 (full-params runs) charges nothing.
+      value_fn: optional ``params -> (N,) learning value in [0, 1]``
+        (``fl/experiment.py`` builds a predictive-uncertainty probe).  Only
+        consulted when ``cfg.uncertainty_weight > 0``; the values fuse into
+        the FedDif auction bids via ``kernels.ops.bid_value_fuse``.
     """
     assert cfg.strategy in STRATEGIES, cfg.strategy
     assert cfg.hop_quant in HOP_QUANTS, cfg.hop_quant
+    assert cfg.scenario in SCENARIOS, cfg.scenario
     if cfg.num_models > cfg.num_clients:
         # The paper trains M ≤ N models (one PUE trains one model per round,
         # constraint 18d); the slot-per-client executors require it too.
@@ -216,7 +240,7 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                                   data_sizes, eval_fn, cfg, espec,
                                   plan_cache=plan_cache,
                                   checkpointer=checkpointer,
-                                  base_bits=base_bits)
+                                  base_bits=base_bits, value_fn=value_fn)
     assert espec.mode in EXECUTORS, espec.mode
     # Materialize the resolved spec onto the config the executor reads, so
     # an explicit EngineSpec wins over stale legacy fields.
@@ -247,6 +271,11 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
     executor = make_executor(espec.mode, loss_fn, local_update,
                              client_batches, cfg_exec)
     ledger = ResourceLedger()
+    # The evolving wireless world.  Static consumes exactly the draws the
+    # pre-world control plane did, so the whole run is bit-identical; the
+    # other scenarios add mobility / handoff / energy on the same streams.
+    world = HostWorld.create(cfg.scenario, topology, channel, n,
+                             energy_budget_j=cfg.energy_budget_j)
 
     global_params = init_fn(key)
     model_bits = agg.model_bits(global_params, cfg.bits_per_param)
@@ -277,6 +306,17 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
             dif_hist, iid_hist = state.dif_hist, state.iid_hist
             round_wall = state.round_wall
             checkpointer.apply_rng_state(rng, state.rng_state)
+            if start_t and cfg.topology_seed is not None:
+                # Rebuild the world's round-t state: mobility / handoff
+                # trajectories are pure functions of the per-round control
+                # streams, which are independent of ``rng``, so replaying
+                # them is exact.  (Per-client *energy* spent in replayed
+                # rounds is not recharged — energy_capped runs should
+                # checkpoint at rounds=cadence boundaries they can afford;
+                # with topology_seed unset a mobile world restarts.)
+                for tt in range(start_t):
+                    world.advance_round(
+                        np.random.default_rng([cfg.topology_seed, tt]))
 
     for t in range(start_t, cfg.rounds):
         # Control-plane stream: per-round and model-seed-independent when
@@ -285,9 +325,11 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
             ctrl_rng = np.random.default_rng([cfg.topology_seed, t])
         else:
             ctrl_rng = rng
-        pos = topology.sample_positions(ctrl_rng, n)
-        up_gamma = np.maximum(_uplink_gamma(channel, pos, ctrl_rng),
-                              GAMMA_FLOOR)
+        pos = world.advance_round(ctrl_rng)
+        up_gamma = np.maximum(world.uplink_gamma(ctrl_rng), GAMMA_FLOOR)
+        learning_value = None
+        if value_fn is not None and cfg.uncertainty_weight > 0.0:
+            learning_value = np.asarray(value_fn(global_params), np.float64)
 
         t_plan = time.time()
         ctx = RoundContext(cfg=cfg, t=t, dsi=dsi, data_sizes=data_sizes,
@@ -295,7 +337,9 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
                            topology=topology, channel=channel,
                            planner=planner, model_bits=model_bits,
                            param_template=global_params,
-                           plan_cache=plan_cache, hop_bits=hop_bits)
+                           plan_cache=plan_cache, hop_bits=hop_bits,
+                           world=world, interference=world.interference(),
+                           learning_value=learning_value)
         schedule = SCHEDULERS[cfg.strategy](ctx)
         if t == 0 and base_bits > 0.0:
             # One-time frozen-base broadcast (adapter view): every round-t
@@ -304,7 +348,11 @@ def run_federated(init_fn: Callable, loss_fn: Callable,
             schedule.wire.append(WireEvent("downlink", float(base_bits),
                                            float(np.median(up_gamma)), n))
         schedule = apply_round_churn(ctx, schedule)
+        if world.has_energy_cap:
+            schedule = apply_energy_cap(ctx, schedule, world.depleted())
         charge_schedule(ledger, schedule)
+        if world.has_energy_cap:
+            world.charge_energy(per_client_energy_j(schedule, n, PRB_HZ))
         plan_s = time.time() - t_plan
         t_exec = time.time()
         global_params, slots = executor.run_round(schedule, global_params,

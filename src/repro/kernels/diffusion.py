@@ -370,3 +370,45 @@ def dol_bid_scores_pallas(dol: jax.Array, chain_size: jax.Array,
         interpret=interpret,
     )(psi_c, a, p_psi, s_psi, d_c, b, p_d, s_d)
     return out[:m, :n]
+
+
+# ------------------------------------------------------------ bid value fuse
+
+def _bid_value_kernel(bids_ref, val_ref, w_ref, o_ref):
+    o_ref[...] = bids_ref[...] * (1.0 + w_ref[0, 0] * val_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def bid_value_fuse_pallas(bids: jax.Array, value: jax.Array,
+                          weight: jax.Array | float, *,
+                          block_m: int = 128, block_n: int = 256,
+                          interpret: bool = True) -> jax.Array:
+    """Fuse the per-client learning value into the (M, N) bid matrix.
+
+    Elementwise VPU tile: grid cell (i, j) scales its bid block by
+    ``1 + w · value`` with the value row broadcast down the model axis —
+    the companion of ``dol_bid_scores_pallas`` in the planner's auction
+    surface.  Semantics of record: ``kernels.ref.bid_value_fuse_ref``.
+    """
+    m, n = bids.shape
+    bids32 = bids.astype(jnp.float32)
+    val = value.astype(jnp.float32).reshape(1, n)
+    w = jnp.asarray(weight, jnp.float32).reshape(1, 1)
+    bm = min(block_m, max(8, -(-m // 8) * 8))
+    bn = min(block_n, max(128, -(-n // 128) * 128))
+    pm, pn = (-m) % bm, (-n) % bn
+    bp = jnp.pad(bids32, ((0, pm), (0, pn)))
+    vp = jnp.pad(val, ((0, 0), (0, pn)))
+    grid = (bp.shape[0] // bm, bp.shape[1] // bn)
+    out = pl.pallas_call(
+        _bid_value_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(bp.shape, jnp.float32),
+        interpret=interpret,
+    )(bp, vp, w)
+    return out[:m, :n]

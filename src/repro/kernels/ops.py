@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.diffusion import (dol_bid_scores_pallas,
+from repro.kernels.diffusion import (bid_value_fuse_pallas,
+                                     dol_bid_scores_pallas,
                                      mix_aggregate_pallas, stack_ravel,
                                      stack_unravel, stc_rows_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -35,7 +36,7 @@ from repro.kernels.stc_compress import stc_apply_pallas, stc_reduce_pallas
 
 __all__ = ["flash_attention", "stc_compress", "ssm_scan", "ssd_scan",
            "mix_aggregate", "mix_aggregate_tree", "stc_topk",
-           "dol_bid_scores", "quant_pack", "quant_unpack"]
+           "dol_bid_scores", "bid_value_fuse", "quant_pack", "quant_unpack"]
 
 _IMPLS = ("pallas", "pallas_interpret", "xla", "ref")
 
@@ -178,6 +179,18 @@ def dol_bid_scores(dol, chain_size, dsi, data_size, *,
     interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
     return dol_bid_scores_pallas(dol, chain_size, dsi, data_size,
                                  interpret=interpret)
+
+
+def bid_value_fuse(bids, value, weight, *,
+                   implementation: str = "auto") -> jax.Array:
+    """Fuse the per-client learning value into the planner's bid matrix:
+    ``bids · (1 + weight · value[None, :])`` — the uncertainty-weighted
+    auction objective next to :func:`dol_bid_scores`."""
+    impl = _resolve(implementation)
+    if impl == "xla":
+        return ref.bid_value_fuse_ref(bids, value, weight)
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return bid_value_fuse_pallas(bids, value, weight, interpret=interpret)
 
 
 def ssm_scan(da, dbx, *, implementation: str = "auto") -> jax.Array:

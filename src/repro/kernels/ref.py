@@ -13,7 +13,7 @@ import numpy as np
 
 __all__ = ["flash_attention_ref", "stc_compress_ref", "ssm_scan_ref",
            "mix_aggregate_ref", "stc_rows_ref", "dol_bid_scores_ref",
-           "quant_pack_ref", "quant_unpack_ref"]
+           "bid_value_fuse_ref", "quant_pack_ref", "quant_unpack_ref"]
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -120,3 +120,17 @@ def ssm_scan_ref(da: jax.Array, dbx: jax.Array,
                          (jnp.moveaxis(da, 1, 0).astype(jnp.float32),
                           jnp.moveaxis(dbx, 1, 0).astype(jnp.float32)))
     return jnp.moveaxis(hs, 0, 1)
+
+
+def bid_value_fuse_ref(bids: jax.Array, value: jax.Array,
+                       weight: jax.Array | float) -> jax.Array:
+    """Learning-value bid fusion: ``bids · (1 + w · value[None, :])``.
+
+    ``value`` is the per-client predictive-uncertainty score in [0, 1];
+    the multiplicative form preserves the sign of the Eq.-32 valuations so
+    constraint (18b) feasibility is decided on the fused bids without
+    changing its structure.  Oracle for ``bid_value_fuse_pallas``.
+    """
+    w = jnp.asarray(weight, jnp.float32)
+    return (bids.astype(jnp.float32)
+            * (1.0 + w * value.astype(jnp.float32)[None, :]))

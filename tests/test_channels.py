@@ -66,3 +66,90 @@ def test_topology_positions_within_cell():
     d = topo.pairwise_distances(pos)
     assert d.shape == (500, 500)
     assert (np.diag(d) == 1.0).all()
+
+
+# ------------------------------------------------- host/jax twin parity
+
+def test_pairwise_distances_host_jax_agree_with_safe_diagonal():
+    import jax.numpy as jnp
+    topo = CellTopology()
+    pos = topo.sample_positions(np.random.default_rng(3), 40)
+    d_host = topo.pairwise_distances(pos)
+    d_jax = np.asarray(topo.pairwise_distances_jax(jnp.asarray(pos)))
+    assert (np.diag(d_host) == 1.0).all()
+    assert (np.diag(d_jax) == 1.0).all()
+    np.testing.assert_allclose(d_jax, d_host, atol=1e-4)
+
+
+def test_positions_from_polar_twins_share_the_transform():
+    """Feed the SAME polar draws through both array namespaces — any drift
+    between the numpy and jnp position math is a direct mismatch here."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(9)
+    r = 250.0 * np.sqrt(rng.uniform(size=64))
+    theta = rng.uniform(0.0, 2 * np.pi, size=64)
+    p_np = CellTopology.positions_from_polar(r, theta, np)
+    p_jnp = np.asarray(CellTopology.positions_from_polar(
+        jnp.asarray(r), jnp.asarray(theta), jnp))
+    np.testing.assert_allclose(p_jnp, p_np, atol=1e-4)
+    assert (np.linalg.norm(p_np, axis=-1) <= 250.0 + 1e-9).all()
+
+
+# --------------------------------------------- property tests (hypothesis)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # CI installs it; the image may not
+    HAVE_HYPOTHESIS = False
+
+    def _identity(f=None, **kw):        # keep the decorators importable
+        return f if f is not None else _identity
+
+    given = settings = _identity
+
+    class st:                           # noqa: N801 - stand-in namespace
+        floats = staticmethod(lambda *a, **k: None)
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(r=st.floats(0.0, 250.0), theta=st.floats(0.0, 2 * np.pi))
+def test_positions_from_polar_radius_invariant_host_jax(r, theta):
+    import jax.numpy as jnp
+    p = CellTopology.positions_from_polar(np.array([r]), np.array([theta]))
+    assert np.linalg.norm(p[0]) == pytest.approx(r, abs=1e-9 * max(r, 1.0))
+    # host/jax twin parity on the SAME polar draw (f32 tolerance)
+    pj = np.asarray(CellTopology.positions_from_polar(
+        jnp.asarray([r]), jnp.asarray([theta]), jnp))
+    np.testing.assert_allclose(pj, p, atol=max(r, 1.0) * 1e-6)
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(gmin=st.floats(1e-3, 20.0), snr=st.floats(1e-2, 1e4))
+def test_outage_probability_is_a_probability_host_jax(gmin, snr):
+    from repro.channels.resources import outage_probability_jax
+    p = outage_probability(gmin, snr)
+    assert 0.0 <= p <= 1.0
+    # monotone: more required rate -> more outage; more SNR -> less
+    assert outage_probability(gmin * 2, snr) >= p - 1e-12
+    assert outage_probability(gmin, snr * 2) <= p + 1e-12
+    assert float(outage_probability_jax(gmin, snr)) == pytest.approx(
+        p, abs=1e-6)
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(snr=st.floats(0.0, 1e6))
+def test_spectral_efficiency_monotone_nonnegative_host_jax(snr):
+    from repro.channels.resources import spectral_efficiency_jax
+    import jax.numpy as jnp
+    g = spectral_efficiency(np.array(snr))
+    assert g >= 0.0
+    assert spectral_efficiency(np.array(snr + 1.0)) >= g
+    assert float(spectral_efficiency_jax(jnp.asarray(snr))) == pytest.approx(
+        float(g), rel=1e-5, abs=1e-6)

@@ -44,6 +44,7 @@ def test_every_sweep_expands_to_valid_specs(name, smoke):
                "gamma_min": c.spec.fl.gamma_min, "task": c.spec.task,
                "strategy": c.spec.fl.strategy,
                "num_clients": c.spec.fl.num_clients,
+               "scenario": c.spec.fl.scenario,
                "engine": c.spec.fl.engine}[c.axis]
         assert got == c.value
         if c.axis == "num_clients":   # scaling sweeps keep M = N

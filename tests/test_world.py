@@ -1,0 +1,318 @@
+"""World-model tests: static degeneracy, scenarios end-to-end, energy
+decomposition, the SNR interference API, and the pure world stepper.
+
+Sizes are kept tiny for CI speed — the `scenario-smoke` job runs exactly
+this file plus the fig_scenarios smoke sweep.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channels.fading import ChannelModel
+from repro.channels.resources import (PRB_HZ, TX_POWER_W,
+                                      spectral_efficiency)
+from repro.channels.topology import CellTopology
+from repro.channels.world import (SCENARIOS, DEFAULT_ENERGY_BUDGET_J,
+                                  HostWorld, WorldConfig, WorldState,
+                                  cell_centers, init_world,
+                                  per_client_energy_j,
+                                  receiver_interference_w, step)
+from repro.fl import ExperimentSpec, FLConfig, run_experiment
+from repro.fl.server import _uplink_gamma
+
+
+def _spec(scenario, strategy="feddif", rounds=3, **fl_kw):
+    fl_kw.setdefault("max_diffusion_rounds", 3)
+    return ExperimentSpec(
+        task="fcn", alpha=0.3, num_samples=1200,
+        fl=FLConfig(strategy=strategy, rounds=rounds, num_clients=6,
+                    num_models=6, seed=0, topology_seed=11,
+                    scenario=scenario, **fl_kw))
+
+
+# ------------------------------------------------- degeneracy (the contract)
+
+def test_static_world_consumes_exactly_the_legacy_draws():
+    """static advance_round + uplink_gamma must consume the same RNG draws
+    with the same arithmetic as the pre-world control plane — positions
+    and gammas are bit-identical, interference is the python float 0.0."""
+    topo, ch, n = CellTopology(num_pues=8), ChannelModel(), 8
+    world = HostWorld.create("static", topo, ch, n)
+    for t in range(3):
+        rng_w = np.random.default_rng([11, t])
+        rng_legacy = np.random.default_rng([11, t])
+        pos = world.advance_round(rng_w)
+        gamma = world.uplink_gamma(rng_w)
+        pos_legacy = topo.sample_positions(rng_legacy, n)
+        gamma_legacy = _uplink_gamma(ch, pos_legacy, rng_legacy)
+        np.testing.assert_array_equal(pos, pos_legacy)
+        np.testing.assert_array_equal(gamma, gamma_legacy)
+    i = world.interference()
+    assert isinstance(i, float) and i == 0.0
+    assert not world.has_energy_cap
+
+
+def test_static_run_bit_identical_to_scenario_default():
+    """An explicit scenario="static" run equals the default-config run —
+    same params hash, ledger fields, and accuracy curve."""
+    res_a = run_experiment(_spec("static"))
+    res_b = run_experiment(dataclasses.replace(
+        _spec("static"), fl=dataclasses.replace(_spec("static").fl)))
+    flat_a = jax.tree.leaves(res_a.params)
+    flat_b = jax.tree.leaves(res_b.params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res_a.ledger.subframes == res_b.ledger.subframes
+    assert res_a.history.accuracy == res_b.history.accuracy
+
+
+# --------------------------------------------------- scenarios, end to end
+
+@pytest.mark.parametrize("scenario", ["mobile", "multicell", "energy_capped"])
+def test_scenario_runs_end_to_end(scenario):
+    res = run_experiment(_spec(scenario))
+    assert len(res.history.accuracy) >= 1
+    assert np.isfinite(res.history.accuracy[-1])
+    assert res.ledger.energy_j > 0.0
+
+
+def test_multicell_interference_lowers_gamma():
+    """Co-channel power from the other cells can only shrink SINR, so the
+    multicell uplink γ sits below a zero-interference replay of the same
+    draws."""
+    topo, ch, n = CellTopology(num_pues=12), ChannelModel(), 12
+    world = HostWorld.create("multicell", topo, ch, n)
+    world.advance_round(np.random.default_rng([3, 0]))
+    i_rx = world.interference()
+    assert isinstance(i_rx, np.ndarray) and i_rx.shape == (n,)
+    assert (i_rx > 0.0).all()
+    # per-link broadcast: columns (receivers) carry the interference
+    link = world.link_interference()
+    assert link.shape == (n, n)
+    np.testing.assert_array_equal(link[0], i_rx)
+    np.testing.assert_array_equal(link[3], i_rx)
+
+
+def test_mobile_positions_evolve_and_stay_in_disc():
+    topo, ch, n = CellTopology(num_pues=10), ChannelModel(), 10
+    world = HostWorld.create("mobile", topo, ch, n)
+    p0 = world.advance_round(np.random.default_rng([5, 0])).copy()
+    p1 = world.advance_round(np.random.default_rng([5, 1])).copy()
+    move = world.cfg.speed_mps * world.cfg.round_s
+    d = np.linalg.norm(p1 - p0, axis=-1)
+    assert (d > 0.0).any()                      # the world actually moves
+    assert (d <= move + 1e-9).all()             # but no faster than v·T
+    assert (np.linalg.norm(p1, axis=-1) <= topo.radius_m + 1e-9).all()
+
+
+def test_energy_cap_masks_training_but_not_wire():
+    """Depletion reuses the churn semantics: dropped clients stop training
+    and aggregating, but already-scheduled airtime still charges — so a
+    partially-depleted capped run diverges in *learning* from the static
+    run while both ledgers stay identical (energy_capped consumes the same
+    RNG draws as static by construction)."""
+    from repro.channels.resources import GAMMA_FLOOR
+    from repro.fl.experiment import spec_model_bits
+    spec = _spec("static", strategy="fedavg", rounds=4)
+    # Replay round 0's uplink γ to pick a budget that splits the cohort:
+    # three clients deplete after round 0, three never do.
+    topo, ch = CellTopology(num_pues=6), ChannelModel()
+    probe = HostWorld.create("energy_capped", topo, ch, 6)
+    rng = np.random.default_rng([11, 0])
+    probe.advance_round(rng)
+    g0 = np.maximum(probe.uplink_gamma(rng), GAMMA_FLOOR)
+    e0 = np.sort(TX_POWER_W * spec_model_bits(spec) / (g0 * PRB_HZ))
+    budget = float((e0[2] + e0[3]) / 2)
+
+    static = run_experiment(spec)
+    capped = run_experiment(_spec("energy_capped", strategy="fedavg",
+                                  rounds=4, energy_budget_j=budget))
+    assert capped.ledger.subframes == static.ledger.subframes
+    assert capped.ledger.transmitted_bits == static.ledger.transmitted_bits
+    assert capped.ledger.energy_j == pytest.approx(static.ledger.energy_j)
+    assert capped.history.accuracy != static.history.accuracy
+
+
+def test_energy_cap_all_depleted_falls_back_to_full_round():
+    """If depletion would empty the aggregation entirely, the round runs
+    unchanged (the apply_churn no-0/0 fallback) — a vanishing budget is
+    therefore bit-identical to no budget at all."""
+    static = run_experiment(_spec("static", strategy="fedavg", rounds=3))
+    capped = run_experiment(_spec("energy_capped", strategy="fedavg",
+                                  rounds=3, energy_budget_j=1e-9))
+    assert capped.history.accuracy == static.history.accuracy
+    assert capped.ledger.subframes == static.ledger.subframes
+
+
+def test_energy_capped_defaults_budget():
+    w = HostWorld.create("energy_capped", CellTopology(), ChannelModel(), 4)
+    assert w.cfg.energy_budget_j == DEFAULT_ENERGY_BUDGET_J
+    assert w.has_energy_cap
+    w.advance_round(np.random.default_rng(0))
+    assert not w.depleted().any()
+    w.charge_energy(np.full(4, 2 * DEFAULT_ENERGY_BUDGET_J))
+    assert w.depleted().all()
+
+
+# -------------------------------------------------- joules decomposition
+
+def test_ledger_energy_matches_wire_event_decomposition():
+    """`ledger.energy_j` must equal the per-client decomposition summed
+    over clients: E = P_tx/B · Σ bits/γ over UE-sent wire events — the
+    joule analogue of the transmitted-bits decomposition.  Downlink is
+    BS-side and charges neither the ledger's joules nor any client."""
+    from repro.channels.resources import ResourceLedger
+    from repro.core.schedule import RoundSchedule, WireEvent, charge_schedule
+    wire = [WireEvent("d2d", 2.4e5, 1.7, src=0),
+            WireEvent("d2d", 2.4e5, 0.9, src=2),
+            WireEvent("uplink", 2.4e5, 2.2, src=1),
+            WireEvent("uplink", 2.4e5, 3.1, src=0),
+            WireEvent("downlink", 2.4e5, 1.0, n_users=4, src=-1)]
+    sched = RoundSchedule(num_slots=4, ops=[], wire=wire, agg=[])
+    ledger = ResourceLedger()
+    charge_schedule(ledger, sched)
+    per_client = per_client_energy_j(sched, 4, PRB_HZ)
+    analytic = sum(TX_POWER_W * ev.bits / (max(ev.gamma, 1e-9) * PRB_HZ)
+                   for ev in wire
+                   if ev.kind in ("d2d", "uplink") and ev.src >= 0)
+    assert per_client.sum() == pytest.approx(analytic, rel=1e-12)
+    assert ledger.energy_j == pytest.approx(per_client.sum(), rel=1e-9)
+    assert per_client[3] == 0.0                    # never transmitted
+    assert per_client[0] > per_client[1] > 0.0     # two events vs one
+
+
+def test_run_energy_is_positive_and_restores_with_ledger():
+    """End-to-end: the static feddif run charges joules alongside bits and
+    the value survives in the result ledger."""
+    res = run_experiment(_spec("static", rounds=2))
+    assert res.ledger.energy_j > 0.0
+    assert np.isfinite(res.ledger.energy_j)
+
+
+# ------------------------------------------------------ snr API migration
+
+def test_snr_interference_w_shim_warns_and_matches():
+    ch = ChannelModel()
+    gains = np.array([1e-9, 3e-9])
+    import repro.channels.fading as fading
+    fading._WARNED_INTERFERENCE_W = False
+    with pytest.warns(DeprecationWarning, match="interference_w"):
+        legacy = ch.snr(gains, interference_w=2e-13)
+    np.testing.assert_array_equal(legacy, ch.snr(gains, 2e-13))
+    # the new positional arg broadcasts per receiver
+    per_rx = ch.snr(gains, np.array([0.0, 1e-12]))
+    assert per_rx[1] < ch.snr(gains, 0.0)[1]
+
+
+# ------------------------------------------------------- the pure stepper
+
+def test_step_is_pure_and_jit_vmap_safe():
+    cfg = WorldConfig(scenario="mobile")
+    topo = CellTopology(num_pues=5)
+    w = init_world(cfg, topo, np.random.default_rng(0), 5)
+    w_jax = jax.tree.map(jnp.asarray, w)
+    out1 = step(w_jax, jax.random.PRNGKey(0), step_m=cfg.step_m)
+    out2 = step(w_jax, jax.random.PRNGKey(0), step_m=cfg.step_m)
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(out1.t) == int(w_jax.t) + 1
+    # vmap over a batch of worlds
+    batch = jax.tree.map(lambda x: jnp.stack([x, x]), w_jax)
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    stepped = jax.jit(jax.vmap(
+        lambda wv, k: step(wv, k, step_m=cfg.step_m)))(batch, keys)
+    assert stepped.positions.shape == (2, 5, 2)
+    # keyless form is deterministic (the planner's in-loop transition)
+    det = step(w_jax, None, step_m=cfg.step_m)
+    np.testing.assert_array_equal(np.asarray(det.waypoints),
+                                  np.asarray(w_jax.waypoints))
+
+
+def test_host_and_jax_step_agree():
+    """One keyless substep through HostWorld's numpy arithmetic and the jnp
+    `step()` must land on the same positions (f32 tolerance)."""
+    cfg = WorldConfig(scenario="mobile")
+    topo = CellTopology(num_pues=16)
+    w0 = init_world(cfg, topo, np.random.default_rng(7), 16)
+    jax_next = step(jax.tree.map(lambda x: jnp.asarray(x, jnp.float32)
+                                 if np.asarray(x).dtype.kind == "f" else
+                                 jnp.asarray(x), w0),
+                    None, step_m=cfg.step_m)
+    delta = w0.waypoints - w0.positions
+    d = np.linalg.norm(delta, axis=-1, keepdims=True)
+    frac = np.minimum(cfg.step_m, d) / np.maximum(d, 1e-9)
+    host_pos = w0.positions + delta * frac
+    np.testing.assert_allclose(np.asarray(jax_next.positions), host_pos,
+                               atol=1e-3)
+
+
+def test_receiver_interference_excludes_serving_cell():
+    cfg = WorldConfig(scenario="multicell", num_cells=3)
+    centers = cell_centers(cfg, 250.0)
+    ch = ChannelModel()
+    # a UE sitting exactly on its serving center sees only the other cells
+    pos = centers[:1].copy()
+    i = receiver_interference_w(pos, np.array([0], np.int32), centers, ch)
+    d_other = np.linalg.norm(pos[0] - centers[1:], axis=-1)
+    beta = 10.0 ** (ch.large_scale_db(np.maximum(d_other, 1.0)) / 10.0)
+    assert i[0] == pytest.approx((beta * ch.params.tx_power_w).sum())
+
+
+# -------------------------------------------------- planner-mode parity
+
+@pytest.mark.parametrize("scenario", ["mobile", "multicell"])
+def test_host_and_jax_planner_agree_on_scenario(scenario):
+    """The device-resident planner must see the same world as the host
+    oracle: identical accuracy curve, ledger, and diffusion activity."""
+    from repro.fl.engine import EngineSpec
+
+    def _with_planner(mode):
+        spec = _spec(scenario, rounds=2)
+        return dataclasses.replace(spec, fl=dataclasses.replace(
+            spec.fl, engine=EngineSpec(mode="host", planner=mode)))
+
+    host = run_experiment(_with_planner("host"))
+    dev = run_experiment(_with_planner("jax"))
+    assert host.history.accuracy == dev.history.accuracy
+    assert host.ledger.subframes == dev.ledger.subframes
+    assert host.history.diffusion_rounds == dev.history.diffusion_rounds
+
+
+def test_uncertainty_weight_changes_plans_not_contract():
+    """Learning-value bidding perturbs the auction (different diffusion
+    chains are allowed) but the run stays finite and charges energy; with
+    weight 0 the value probe is never consulted."""
+    fused = run_experiment(_spec("static", uncertainty_weight=0.5))
+    assert np.isfinite(fused.history.accuracy[-1])
+    plain = run_experiment(_spec("static"))
+    base = run_experiment(_spec("static", uncertainty_weight=0.0))
+    assert plain.history.accuracy == base.history.accuracy
+    assert plain.ledger.subframes == base.ledger.subframes
+
+
+def test_mobile_planner_compiles_once_per_round_signature(monkeypatch):
+    """World stepping inside the jitted while_loop must not retrace: a
+    4-round mobile run with the device planner traces `_plan_rounds`
+    exactly once (shapes and statics are round-invariant)."""
+    from repro.core import planner as P
+    from repro.fl.engine import EngineSpec
+
+    traces = {"n": 0}
+    orig = P._plan_rounds
+
+    def counting(*a, **k):
+        traces["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(P, "plan_rounds", jax.jit(
+        counting, static_argnames=("metric", "allow_retraining",
+                                   "mobility", "step_m", "use_value")))
+    spec = _spec("mobile", rounds=4)
+    spec = dataclasses.replace(spec, fl=dataclasses.replace(
+        spec.fl, engine=EngineSpec(mode="host", planner="jax")))
+    run_experiment(spec)
+    assert traces["n"] == 1
